@@ -1,0 +1,38 @@
+"""Beyond-paper: the planner's channelized-KV decode trade (DESIGN.md SS3).
+
+COAXIAL's Fig-2a argument on TPU: spreading a 32k-token KV cache over N
+chips' HBM vs paying the flash-decode combine premium.  Derived column:
+predicted decode-step speedup at the planner's chosen channel count."""
+
+from benchmarks.common import emit, time_call
+from repro.configs import get_config
+from repro.core import planner
+
+
+def main():
+    for arch, batch_per_chip in [("mistral-large-123b", 8),
+                                 ("stablelm-1.6b", 8),
+                                 ("qwen2-vl-72b", 8)]:
+        cfg = get_config(arch)
+        hd = cfg.resolved_head_dim
+        s = 32768
+        kv_bytes = (2 * cfg.n_layers * batch_per_chip * s *
+                    cfg.n_kv_heads * hd * 2)
+        qkv_flops = 4 * cfg.n_layers * batch_per_chip * s * \
+            cfg.n_heads * hd
+        combine_bytes = (cfg.n_layers * batch_per_chip * cfg.n_heads *
+                         (hd + 2) * 4)
+        us, plan = time_call(lambda kb=kv_bytes, qf=qkv_flops,
+                             cb=combine_bytes: planner.plan_decode_kv(
+                                 kv_bytes=kb, qkv_flops=qf,
+                                 combine_bytes=cb), iters=1)
+        emit(f"channelized.{arch}.n_channels", us, plan.n_channels)
+        emit(f"channelized.{arch}.speedup", 0.0, f"{plan.speedup:.2f}")
+        emit(f"channelized.{arch}.baseline_us", 0.0,
+             f"{plan.baseline.total_s * 1e6:.1f}")
+        emit(f"channelized.{arch}.step_us", 0.0,
+             f"{plan.cost.total_s * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows; ``derived`` is the
+figure/table-relevant quantity (a speedup, a latency, a roofline fraction).
+"""
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6, out
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

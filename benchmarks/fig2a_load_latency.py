@@ -1,0 +1,32 @@
+"""Fig 2a: DDR5-4800 load-latency curve -- parametric model vs DES memsim.
+
+Paper anchors: 3x average latency at 50% load, 4x at 60%; p90 4.7x / 7.1x.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import memsim, queueing
+
+
+def main():
+    rhos = np.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9])
+    us, curve = time_call(
+        lambda: memsim.load_latency_curve(rhos=rhos, steps=120_000), iters=1)
+    for i, r in enumerate(rhos):
+        par = float(queueing.avg_latency_ns(r))
+        p90 = float(queueing.p90_latency_ns(r))
+        emit(f"fig2a.rho{r:.1f}.param_mean_ns", us / len(rhos), f"{par:.1f}")
+        emit(f"fig2a.rho{r:.1f}.des_mean_ns", us / len(rhos),
+             f"{curve['mean_ns'][i]:.1f}")
+        emit(f"fig2a.rho{r:.1f}.param_p90_ns", us / len(rhos), f"{p90:.1f}")
+        emit(f"fig2a.rho{r:.1f}.des_p90_ns", us / len(rhos),
+             f"{curve['p90_ns'][i]:.1f}")
+    emit("fig2a.anchor.3x_at_50pct", 0.0,
+         f"{float(queueing.avg_latency_ns(0.5)) / 40.0:.2f}")
+    emit("fig2a.anchor.4x_at_60pct", 0.0,
+         f"{float(queueing.avg_latency_ns(0.6)) / 40.0:.2f}")
+
+
+if __name__ == "__main__":
+    main()

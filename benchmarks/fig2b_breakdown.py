@@ -1,0 +1,21 @@
+"""Fig 2b: per-workload latency breakdown (service vs queuing) and
+bandwidth utilization on the DDR baseline."""
+
+from benchmarks.common import emit, time_call
+from repro.core import cpu_model
+
+
+def main():
+    us, res = time_call(lambda: cpu_model.solve(cpu_model.DDR_BASELINE),
+                        iters=1)
+    from repro.core.workloads import NAMES
+    for i, n in enumerate(NAMES):
+        emit(f"fig2b.{n}.queue_ns", us / len(NAMES),
+             f"{res.queue_ns[i]:.1f}")
+        emit(f"fig2b.{n}.rho", us / len(NAMES), f"{res.rho[i]:.3f}")
+    share = (res.queue_ns / res.latency_ns).mean()
+    emit("fig2b.mean_queue_share", us, f"{share:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Fig 3: performance under bimodal memory latency (constant 150ns mean).
+
+Paper geomeans: 0.86 / 0.78 / 0.71 for stdev 100 / 150 / 200 ns."""
+
+from benchmarks.common import emit, time_call
+from repro.core import cpu_model
+
+
+def main():
+    us, out = time_call(cpu_model.variance_experiment, iters=1)
+    for (lo, hi), row in out.items():
+        emit(f"fig3.stdev{int(row['stdev_ns'])}.geomean", us / 3,
+             f"{row['geomean']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

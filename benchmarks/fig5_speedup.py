@@ -1,0 +1,26 @@
+"""Fig 5: COAXIAL-4x vs DDR baseline -- the paper's main result.
+
+Paper: 1.52x geomean, lbm ~3x, 10/35 above 2x, 4 regressions (gcc worst).
+"""
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial
+
+
+def main():
+    us, cmp = time_call(lambda: coaxial.evaluate(coaxial.COAXIAL_4X),
+                        iters=1)
+    for i, n in enumerate(cmp.names):
+        emit(f"fig5.{n}.speedup", us / len(cmp.names),
+             f"{cmp.speedup[i]:.3f}")
+    s = cmp.summary()
+    emit("fig5.geomean_speedup", us, f"{cmp.geomean_speedup:.3f}")
+    emit("fig5.n_above_2x", 0.0, cmp.n_above_2x)
+    emit("fig5.n_regressions", 0.0, cmp.n_regressions)
+    emit("fig5.queue_share", 0.0, f"{s['queue_share_of_latency']:.3f}")
+    emit("fig5.mean_queue_base_ns", 0.0, f"{s['mean_base_queue_ns']:.1f}")
+    emit("fig5.mean_queue_coax_ns", 0.0, f"{s['mean_queue_ns']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig 6: latency distributions -- group means/stdevs + streamcluster CDF
+(baseline vs COAXIAL channel at matched per-channel load)."""
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial, memsim
+from repro.core.workloads import WORKLOADS
+
+
+def main():
+    cmp = coaxial.evaluate(coaxial.COAXIAL_4X)
+    suites = sorted({w.suite for w in WORKLOADS})
+    for suite in suites:
+        idx = [i for i, w in enumerate(WORKLOADS) if w.suite == suite]
+        emit(f"fig6a.{suite}.base_mean_ns", 0.0,
+             f"{np.mean(cmp.base.latency_ns[idx]):.1f}")
+        emit(f"fig6a.{suite}.base_stdev_ns", 0.0,
+             f"{np.mean(cmp.base.sigma_ns[idx]):.1f}")
+        emit(f"fig6a.{suite}.coax_mean_ns", 0.0,
+             f"{np.mean(cmp.res.latency_ns[idx]):.1f}")
+        emit(f"fig6a.{suite}.coax_stdev_ns", 0.0,
+             f"{np.mean(cmp.res.sigma_ns[idx]):.1f}")
+
+    # Streamcluster CDF: DDR channel at its baseline rho vs a COAXIAL
+    # channel at rho/4 with the 30ns premium.
+    i = [w.name for w in WORKLOADS].index("streamcluster")
+    rho_b = float(cmp.base.rho[i])
+    us, stats = time_call(lambda: memsim.simulate(
+        [memsim.ChannelConfig(rho=rho_b),
+         memsim.ChannelConfig(rho=rho_b / 4, cxl_lat_ns=30.0)],
+        steps=150_000), iters=1)
+    for j, tag in enumerate(["ddr", "coaxial"]):
+        emit(f"fig6b.streamcluster.{tag}.p50_ns", us / 2,
+             f"{stats.p50_ns[j]:.0f}")
+        emit(f"fig6b.streamcluster.{tag}.p90_ns", us / 2,
+             f"{stats.p90_ns[j]:.0f}")
+        emit(f"fig6b.streamcluster.{tag}.stdev_ns", us / 2,
+             f"{stats.stdev_ns[j]:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Fig 7: design points -- COAXIAL-2x / 4x / asym (+5x iso-pin).
+
+Paper geomeans: 1.26 / 1.52 / 1.67."""
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial
+
+
+def main():
+    for sys in (coaxial.COAXIAL_2X, coaxial.COAXIAL_4X, coaxial.COAXIAL_5X,
+                coaxial.COAXIAL_ASYM):
+        us, cmp = time_call(lambda s=sys: coaxial.evaluate(s), iters=1)
+        emit(f"fig7.{sys.name}.geomean_speedup", us,
+             f"{cmp.geomean_speedup:.3f}")
+
+
+if __name__ == "__main__":
+    main()

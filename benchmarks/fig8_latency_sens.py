@@ -1,0 +1,20 @@
+"""Fig 8: sensitivity to the CXL latency premium (30ns vs 50ns).
+
+Paper: 1.52x -> 1.33x geomean."""
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial
+
+
+def main():
+    for lat in (30.0, 50.0):
+        us, cmp = time_call(
+            lambda l=lat: coaxial.evaluate(coaxial.COAXIAL_4X,
+                                           iface_lat_ns=l), iters=1)
+        emit(f"fig8.lat{int(lat)}ns.geomean_speedup", us,
+             f"{cmp.geomean_speedup:.3f}")
+        emit(f"fig8.lat{int(lat)}ns.n_regressions", 0.0, cmp.n_regressions)
+
+
+if __name__ == "__main__":
+    main()

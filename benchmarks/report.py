@@ -1,0 +1,115 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
+
+Markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+
+import argparse
+import json
+
+from benchmarks.roofline import analyze, load_cells, model_flops
+from repro.configs import ARCHS, SHAPES
+
+
+def dryrun_table(mesh: str) -> str:
+    cells = {(c["arch"], c["shape"]): c for c in load_cells(mesh)}
+    lines = [
+        f"| arch | shape | status | compile s | HLO GFLOP/chip | "
+        f"HBM GB/chip | coll GB/chip | temp GiB/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = cells.get((arch, shape.name))
+            if c is None:
+                lines.append(f"| {arch} | {shape.name} | missing | | | | | |")
+                continue
+            if c["status"] != "ok":
+                reason = c["status"].replace("skip: ", "")
+                lines.append(
+                    f"| {arch} | {shape.name} | SKIP ({reason[:42]}) "
+                    f"| | | | | |")
+                continue
+            temp = c["memory"].get("temp_bytes", 0) / 2**30
+            lines.append(
+                f"| {arch} | {shape.name} | ok | {c['seconds']:.0f} | "
+                f"{c['flops_per_chip']/1e9:.0f} | "
+                f"{c['bytes_per_chip']/1e9:.1f} | "
+                f"{c['collectives']['total']/1e9:.2f} | {temp:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str) -> str:
+    cells = {(c["arch"], c["shape"]): c for c in load_cells(mesh)}
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | "
+        "dominant | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = cells.get((arch, shape.name))
+            if c is None or c["status"] != "ok":
+                continue
+            t = analyze(c)
+            lines.append(
+                f"| {arch} | {shape.name} | {t['compute_s']*1e3:.2f} | "
+                f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+                f"{t['dominant'].replace('_s','')} | "
+                f"{t['useful_ratio']:.2f} | {t['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def variant_table(arch: str, shape: str, mesh: str = "16x16") -> str:
+    """All recorded variants of one cell (the §Perf iteration log)."""
+    rows = []
+    import glob
+    import os
+    from benchmarks.roofline import RESULTS_DIR
+    for path in sorted(glob.glob(os.path.join(
+            RESULTS_DIR, f"{arch}__{shape}__{mesh}__*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    lines = [
+        "| variant | GFLOP/chip | HBM GB/chip | coll GB/chip | "
+        "temp GiB | dominant | bound ms |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in rows:
+        if c["status"] != "ok":
+            lines.append(f"| {c['variant']} | error: {c['error'][:60]} "
+                         f"| | | | | |")
+            continue
+        t = analyze(c)
+        lines.append(
+            f"| {c['variant']} | {c['flops_per_chip']/1e9:.0f} | "
+            f"{c['bytes_per_chip']/1e9:.1f} | "
+            f"{c['collectives']['total']/1e9:.2f} | "
+            f"{c['memory'].get('temp_bytes',0)/2**30:.1f} | "
+            f"{t['dominant'].replace('_s','')} | {t['bound_s']*1e3:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
+                    default=None)
+    args = ap.parse_args()
+    if args.variants:
+        print(variant_table(args.variants[0], args.variants[1], args.mesh))
+        return
+    if args.section in ("all", "dryrun"):
+        print(f"### Dry-run ({args.mesh})\n")
+        print(dryrun_table(args.mesh))
+        print()
+    if args.section in ("all", "roofline"):
+        print(f"### Roofline ({args.mesh})\n")
+        print(roofline_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

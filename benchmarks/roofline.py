@@ -1,0 +1,106 @@
+"""§Roofline: the three roofline terms per (arch x shape) cell.
+
+Reads the dry-run artifacts (results/dryrun/*.json: per-chip HLO flops,
+bytes, parsed collective bytes) and derives, per cell:
+
+    compute term    = HLO_FLOPs / (chips * 197e12)
+    memory term     = HLO_bytes / (chips * 819e9)
+    collective term = collective_bytes / (chips * 50e9)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE; 2*N*D for inference-shape
+cells, which run forward-only) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs.
+
+Note: ``cost_analysis`` on an SPMD module reports per-chip values, so the
+numerator is already per-chip and the formulas divide by one chip's peaks;
+the two conventions agree (both numerator and denominator drop the x chips).
+"""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import get_config, get_shape
+from repro.core import hw
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Whole-job useful FLOPs for the cell, per chip (to match HLO flops)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        per_token = 6 * n
+        tokens = shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        per_token = 2 * n
+        tokens = shape.seq_len * shape.global_batch
+    else:  # decode: one token per sequence
+        per_token = 2 * n
+        tokens = shape.global_batch
+    return per_token * tokens
+
+
+def load_cells(mesh: str = "16x16", variant: str = "baseline"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if (cell.get("mesh") == mesh and
+                cell.get("variant", "baseline") == variant):
+            cells.append(cell)
+    return cells
+
+
+def analyze(cell: dict) -> dict | None:
+    if cell["status"] != "ok":
+        return None
+    chips = cell["chips"]
+    # All numerators are per chip (parsed from the per-partition HLO with
+    # loop-trip scaling).  The memory term uses the fused-boundary proxy
+    # (hbm_bytes) when present; bytes_per_chip (all-op boundary) is the
+    # unfused upper bound kept for reference.
+    compute_s = cell["flops_per_chip"] / hw.TPU_PEAK_FLOPS
+    hbm = cell.get("hbm_bytes_per_chip", 0.0) or cell["bytes_per_chip"]
+    memory_s = hbm / hw.TPU_HBM_BW
+    coll_s = cell["collectives"]["total"] / hw.TPU_ICI_BW_PER_LINK
+    mf = model_flops(cell["arch"], cell["shape"]) / chips
+    terms = dict(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bound_s=max(compute_s, memory_s, coll_s),
+        model_flops_per_chip=mf,
+        useful_ratio=mf / cell["flops_per_chip"]
+        if cell["flops_per_chip"] else 0.0,
+        mfu_bound=mf / hw.TPU_PEAK_FLOPS /
+        max(compute_s, memory_s, coll_s, 1e-30),
+    )
+    terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                            key=lambda k: terms[k])
+    return terms
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        emit("roofline.no_dryrun_artifacts", 0.0, "run repro.launch.dryrun")
+        return
+    for cell in cells:
+        key = f"roofline.{cell['arch']}.{cell['shape']}"
+        t = analyze(cell)
+        if t is None:
+            emit(key + ".status", 0.0, cell["status"].split(":")[0])
+            continue
+        emit(key + ".compute_ms", 0.0, f"{t['compute_s']*1e3:.3f}")
+        emit(key + ".memory_ms", 0.0, f"{t['memory_s']*1e3:.3f}")
+        emit(key + ".collective_ms", 0.0, f"{t['collective_s']*1e3:.3f}")
+        emit(key + ".dominant", 0.0, t["dominant"].replace("_s", ""))
+        emit(key + ".useful_ratio", 0.0, f"{t['useful_ratio']:.3f}")
+        emit(key + ".roofline_fraction", 0.0, f"{t['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Run every benchmark; print ``name,us_per_call,derived`` CSV.
+
+One module per paper figure/table (fig2a..fig9, table2, table5), the STREAM
+Pallas kernels, the beyond-paper channelized-decode planner study, and the
+roofline table derived from the dry-run artifacts.
+"""
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig2a_load_latency",
+    "benchmarks.fig2b_breakdown",
+    "benchmarks.fig3_variance",
+    "benchmarks.fig5_speedup",
+    "benchmarks.fig6_distribution",
+    "benchmarks.fig7_designs",
+    "benchmarks.fig8_latency_sens",
+    "benchmarks.fig9_utilization",
+    "benchmarks.table2_designs",
+    "benchmarks.table5_edp",
+    "benchmarks.stream_kernels",
+    "benchmarks.channelized_decode",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+        except Exception:       # noqa: BLE001 -- report all benches
+            failures += 1
+            print(f"{mod_name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

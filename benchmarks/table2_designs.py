@@ -1,0 +1,16 @@
+"""Table 2: pins / relative area of the server design points."""
+
+from benchmarks.common import emit
+from repro.core import coaxial
+
+
+def main():
+    pins = coaxial.pin_report()
+    emit("table2.bw_per_pin_ratio", 0.0, f"{pins['bw_per_pin_ratio']:.2f}")
+    for name, row in coaxial.area_report().items():
+        emit(f"table2.{name}.rel_area", 0.0, f"{row['rel_area']:.3f}")
+        emit(f"table2.{name}.rel_pins", 0.0, f"{row['rel_pins']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Table 5: power and energy-delay product.
+
+Paper: 713W vs 1180W; EDP ratio 0.72."""
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial
+
+
+def main():
+    us, rep = time_call(coaxial.edp_report, iters=1)
+    emit("table5.baseline.total_w", us, f"{rep['baseline']['total_w']:.0f}")
+    emit("table5.coaxial.total_w", 0.0, f"{rep['coaxial']['total_w']:.0f}")
+    emit("table5.baseline.cpi", 0.0, f"{rep['baseline']['cpi']:.2f}")
+    emit("table5.coaxial.cpi", 0.0, f"{rep['coaxial']['cpi']:.2f}")
+    emit("table5.edp_ratio", 0.0, f"{rep['edp_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

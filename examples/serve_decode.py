@@ -1,0 +1,22 @@
+"""Serving example: batched prefill + greedy decode across architectures,
+including the attention-free (RWKV6) and hybrid (Zamba2) families whose
+O(1)-state decode is what the long_500k dry-run cell exercises.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+sys.argv = [sys.argv[0]]
+from repro.launch import serve
+
+
+def main():
+    for arch in ("stablelm-1.6b", "rwkv6-1.6b", "zamba2-2.7b"):
+        print(f"=== {arch} ===")
+        serve.main(["--arch", arch, "--smoke", "--batch", "2",
+                    "--prompt-len", "32", "--gen", "8"])
+
+
+if __name__ == "__main__":
+    main()

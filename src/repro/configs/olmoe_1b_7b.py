@@ -1,0 +1,19 @@
+"""OLMoE 1B-7B: MoE decoder, 64 experts top-8.
+
+Assigned config: [arXiv:2409.02060; hf]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+name="olmoe-1b-7b",
+family="moe",
+n_layers=16,
+d_model=2048,
+n_heads=16,
+n_kv_heads=16,
+d_ff=1024,
+vocab=50304,
+n_experts=64,
+top_k=8,
+)

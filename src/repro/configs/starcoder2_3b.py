@@ -1,0 +1,18 @@
+"""StarCoder2-3B: dense decoder, GQA kv=2, RoPE.
+
+Assigned config: [arXiv:2402.19173; hf]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+name="starcoder2-3b",
+family="dense",
+n_layers=30,
+d_model=3072,
+n_heads=24,
+n_kv_heads=2,
+d_ff=12288,
+vocab=49152,
+activation="gelu",
+)

@@ -1,0 +1,11 @@
+"""COAXIAL core: the paper's contribution as a composable JAX library.
+
+Submodules:
+  hw         -- hardware constants (paper world + TPU v5e world)
+  queueing   -- calibrated load->latency models (Fig 2a)
+  memsim     -- mechanistic discrete-event memory simulator (lax.scan)
+  workloads  -- Table 4's 35 workloads + behavioral parameters
+  cpu_model  -- fixed-point loaded-CPU model (the ChampSim stand-in)
+  coaxial    -- design points, evaluation engine, EDP/area reports
+  planner    -- the TPU adaptation: queue-aware channelized-sharding planner
+"""

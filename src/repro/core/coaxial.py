@@ -1,0 +1,244 @@
+"""End-to-end COAXIAL evaluation engine (paper §4-§6, Tables 2 & 5).
+
+Everything the paper reports is derivable from here:
+
+  * :func:`evaluate` -- per-workload speedups, latency breakdowns and
+    utilizations for any design point (Figs 5, 7, 8, 9);
+  * :func:`area_report` / :func:`pin_report` -- Table 1/2 accounting;
+  * :func:`edp_report` -- the §6.6 power and energy-delay-product model
+    (Table 5);
+  * :func:`sensitivity_latency` / :func:`sensitivity_cores` -- §6.4 / §6.5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cpu_model, hw
+from repro.core.cpu_model import (COAXIAL_2X, COAXIAL_4X, COAXIAL_5X,
+                                  COAXIAL_ASYM, DDR_BASELINE, DESIGNS,
+                                  MemSystem, ModelResult, geomean, solve)
+from repro.core.workloads import NAMES, WORKLOADS
+
+__all__ = [
+    "COAXIAL_2X", "COAXIAL_4X", "COAXIAL_5X", "COAXIAL_ASYM", "DDR_BASELINE",
+    "DESIGNS", "MemSystem", "evaluate", "Comparison", "area_report",
+    "pin_report", "edp_report", "sensitivity_latency", "sensitivity_cores",
+]
+
+
+@dataclasses.dataclass
+class Comparison:
+    """A design point evaluated against the DDR baseline."""
+
+    sys: MemSystem
+    base: ModelResult
+    res: ModelResult
+    names: tuple
+
+    @property
+    def speedup(self) -> np.ndarray:
+        return self.res.speedup_vs(self.base)
+
+    @property
+    def geomean_speedup(self) -> float:
+        return geomean(self.speedup)
+
+    @property
+    def n_above_2x(self) -> int:
+        return int(np.sum(self.speedup > 2.0))
+
+    @property
+    def n_regressions(self) -> int:
+        return int(np.sum(self.speedup < 0.995))
+
+    @property
+    def worst(self) -> tuple[str, float]:
+        i = int(np.argmin(self.speedup))
+        return self.names[i], float(self.speedup[i])
+
+    @property
+    def best(self) -> tuple[str, float]:
+        i = int(np.argmax(self.speedup))
+        return self.names[i], float(self.speedup[i])
+
+    def row(self, name: str) -> dict:
+        i = self.names.index(name)
+        return dict(
+            name=name, speedup=float(self.speedup[i]),
+            base_latency_ns=float(self.base.latency_ns[i]),
+            base_queue_ns=float(self.base.queue_ns[i]),
+            latency_ns=float(self.res.latency_ns[i]),
+            queue_ns=float(self.res.queue_ns[i]),
+            base_rho=float(self.base.rho[i]), rho=float(self.res.rho[i]),
+        )
+
+    def summary(self) -> dict:
+        return dict(
+            design=self.sys.name,
+            geomean_speedup=self.geomean_speedup,
+            best=self.best, worst=self.worst,
+            n_above_2x=self.n_above_2x, n_regressions=self.n_regressions,
+            mean_base_queue_ns=float(np.mean(self.base.queue_ns)),
+            mean_queue_ns=float(np.mean(self.res.queue_ns)),
+            mean_base_rho=float(np.mean(self.base.rho)),
+            mean_rho=float(np.mean(self.res.rho)),
+            queue_share_of_latency=float(np.mean(
+                self.base.queue_ns / self.base.latency_ns)),
+            max_queue_share=float(np.max(
+                self.base.queue_ns / self.base.latency_ns)),
+        )
+
+
+def evaluate(sys: MemSystem = COAXIAL_4X, *, n_active: int = hw.SIM_CORES,
+             iface_lat_ns: float | None = None,
+             workloads=WORKLOADS) -> Comparison:
+    base = solve(DDR_BASELINE, n_active=n_active, workloads=workloads)
+    res = solve(sys, n_active=n_active, iface_lat_ns=iface_lat_ns,
+                workloads=workloads)
+    return Comparison(sys=sys, base=base, res=res,
+                      names=tuple(w.name for w in workloads))
+
+
+def sensitivity_latency(latencies_ns=(hw.CXL_LAT_NS,
+                                      hw.CXL_LAT_PESSIMISTIC_NS),
+                        sys: MemSystem = COAXIAL_4X) -> dict:
+    """§6.4: COAXIAL speedup at 30ns vs 50ns CXL premium (Fig 8)."""
+    return {lat: evaluate(sys, iface_lat_ns=lat) for lat in latencies_ns}
+
+
+def sensitivity_cores(cores=(1, 4, 8, 12), sys: MemSystem = COAXIAL_4X):
+    """§6.5: speedup vs active cores; baseline at the same core count."""
+    return {n: evaluate(sys, n_active=n) for n in cores}
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / Table 2: area and pins for the full 144-core server.
+# ---------------------------------------------------------------------------
+
+FULL_CORES = 144
+FULL_DDR_CHANNELS = 12
+
+
+def _die_area(cores, llc_mb, ddr_ch, pcie_x8):
+    return (cores * hw.AREA_ZEN3_CORE + llc_mb * hw.AREA_L3_PER_MB +
+            ddr_ch * hw.AREA_DDR_CH + pcie_x8 * hw.AREA_PCIE_X8)
+
+
+def area_report() -> dict:
+    """Reproduces Table 2's relative-area column from Table 1's entries."""
+    base = _die_area(FULL_CORES, FULL_CORES * 2, FULL_DDR_CHANNELS, 0)
+    rows = {
+        "ddr-baseline": (_die_area(FULL_CORES, 288, 12, 0), 12 * hw.DDR5_PINS),
+        "coaxial-5x": (_die_area(FULL_CORES, 288, 0, 60), 60 * hw.PCIE_X8_PINS),
+        "coaxial-2x": (_die_area(FULL_CORES, 288, 0, 24), 24 * hw.PCIE_X8_PINS),
+        "coaxial-4x": (_die_area(FULL_CORES, 144, 0, 48), 48 * hw.PCIE_X8_PINS),
+        "coaxial-asym": (_die_area(FULL_CORES, 144, 0, 48),
+                         48 * hw.PCIE_X8_PINS),
+    }
+    return {name: dict(rel_area=a / base, mem_pins=p,
+                       rel_pins=p / (12 * hw.DDR5_PINS))
+            for name, (a, p) in rows.items()}
+
+
+def pin_report() -> dict:
+    """§4.1: pins and peak bandwidth per interface choice."""
+    ddr_per_pin = hw.DDR5_CH_BW_GBPS / hw.DDR5_PINS
+    # The paper's "4x" compares PCIe's *per-direction* bandwidth per pin
+    # against DDR's combined-direction figure (conservative: PCIe moves the
+    # same bytes in the other direction simultaneously, §2.3).
+    x8_per_pin_dir = 32.0 / hw.PCIE_X8_PINS
+    return dict(
+        ddr5_pins=hw.DDR5_PINS,
+        ddr5_peak_gbps=hw.DDR5_CH_BW_GBPS,
+        ddr5_gbps_per_pin=ddr_per_pin,
+        x8_pins=hw.PCIE_X8_PINS,
+        x8_peak_gbps_per_dir=32.0,
+        x8_gbps_per_pin_per_dir=x8_per_pin_dir,
+        x8_gbps_per_pin_duplex=2 * 32.0 / hw.PCIE_X8_PINS,
+        bw_per_pin_ratio=x8_per_pin_dir / ddr_per_pin,
+        bw_per_pin_ratio_duplex=2 * x8_per_pin_dir / ddr_per_pin,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Table 5: power and EDP for the 144-core server.
+# ---------------------------------------------------------------------------
+
+def _dimm_power(channels, util):
+    return channels * (hw.DIMM_STATIC_W_PER_CH + hw.DIMM_DYN_W_PER_CH * util)
+
+
+def edp_report(sys: MemSystem = COAXIAL_4X) -> dict:
+    cmp = evaluate(sys)
+    # Scale channel counts 12-core sim -> 144-core server (x12).
+    scale = FULL_CORES // hw.SIM_CORES
+    base_ch = DDR_BASELINE.dram_channels * scale
+    sys_ch = sys.dram_channels * scale
+    lanes = sys.links * scale * 8
+
+    util_base = float(np.mean(cmp.base.rho))
+    util_sys = float(np.mean(cmp.res.rho))
+
+    p_base = dict(
+        package_w=hw.PKG_POWER_W,
+        ddr_mc_phy_w=base_ch * hw.DDR_MC_PHY_W_PER_CH,
+        dimm_w=_dimm_power(base_ch, util_base),
+        cxl_iface_w=0.0)
+    p_sys = dict(
+        package_w=hw.PKG_POWER_W,
+        ddr_mc_phy_w=sys_ch * hw.DDR_MC_PHY_W_PER_CH,
+        dimm_w=_dimm_power(sys_ch, util_sys),
+        cxl_iface_w=lanes * hw.PCIE_LANE_POWER_W)
+
+    total_base = sum(p_base.values())
+    total_sys = sum(p_sys.values())
+    cpi_base = geomean(cmp.base.cpi)
+    cpi_sys = geomean(cmp.res.cpi)
+    edp_base = total_base * cpi_base**2
+    edp_sys = total_sys * cpi_sys**2
+    return dict(
+        baseline=dict(**p_base, total_w=total_base, cpi=cpi_base,
+                      util=util_base, edp=edp_base),
+        coaxial=dict(**p_sys, total_w=total_sys, cpi=cpi_sys,
+                     util=util_sys, edp=edp_sys),
+        edp_ratio=edp_sys / edp_base,
+        power_ratio=total_sys / total_base,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Convenience: the full headline table for tests / EXPERIMENTS.md.
+# ---------------------------------------------------------------------------
+
+def headline() -> dict:
+    c4 = evaluate(COAXIAL_4X)
+    c2 = evaluate(COAXIAL_2X)
+    ca = evaluate(COAXIAL_ASYM)
+    c50 = evaluate(COAXIAL_4X, iface_lat_ns=hw.CXL_LAT_PESSIMISTIC_NS)
+    fig3 = cpu_model.variance_experiment()
+    edp = edp_report()
+    cores = sensitivity_cores()
+    return dict(
+        gm_4x=c4.geomean_speedup,
+        gm_2x=c2.geomean_speedup,
+        gm_asym=ca.geomean_speedup,
+        gm_50ns=c50.geomean_speedup,
+        lbm_speedup=float(c4.speedup[NAMES.index("lbm")]),
+        n_above_2x=c4.n_above_2x,
+        n_regressions=c4.n_regressions,
+        worst=c4.worst,
+        queue_share=c4.summary()["queue_share_of_latency"],
+        max_queue_share=c4.summary()["max_queue_share"],
+        mean_base_queue_ns=c4.summary()["mean_base_queue_ns"],
+        mean_coax_queue_ns=c4.summary()["mean_queue_ns"],
+        stream_copy=c4.row("stream-copy"),
+        fig3_geomeans=[v["geomean"] for v in fig3.values()],
+        edp_ratio=edp["edp_ratio"],
+        gm_1core=sensitivity_cores((1,))[1].geomean_speedup,
+        gm_8core=cores[8].geomean_speedup,
+        util_base=edp["baseline"]["util"],
+        util_coax=edp["coaxial"]["util"],
+    )

@@ -1,0 +1,304 @@
+"""HLO text analysis with loop-trip-count scaling.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, regardless
+of trip count -- useless for scan-over-layers models (an 88-layer scan reads
+as one layer).  This module re-derives the roofline numerators from
+``compiled.as_text()`` by walking the computation call graph:
+
+  * dot FLOPs: 2 * prod(output dims) * prod(contracting dims), per dot;
+  * HBM-traffic proxy: operand+output bytes of every top-level op that
+    actually moves data (fusions count their boundary, not their interior);
+  * collective bytes: output size per all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute;
+  * ``while`` bodies are multiplied by the trip count parsed from the loop
+    condition's comparison constant; ``conditional`` takes the max branch.
+
+The result is a per-chip (the module is the per-partition SPMD program)
+{flops, bytes, collective bytes} that correctly scales with loop depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+#: ops whose operand/output boundary traffic we count as HBM bytes.
+_DATA_OPS = {
+    "fusion", "dot", "convolution", "copy", "transpose", "concatenate",
+    "dynamic-update-slice", "dynamic-slice", "gather", "scatter", "reduce",
+    "broadcast", "slice", "pad", "reverse", "sort", "convert", "select",
+    "add", "multiply", "subtract", "divide", "maximum", "minimum", "tanh",
+    "exponential", "log", "rsqrt", "compare", "iota", "reduce-window",
+    "custom-call", "cholesky", "triangular-solve", "clamp", "negate",
+} | set(COLLECTIVES)
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<rest>.*)$")
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _array_bytes(type_str: str) -> int:
+    """Total bytes of all arrays mentioned in a type string (tuples sum)."""
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dtype]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_array_dims(type_str: str):
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None, None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    op: str
+    type_str: str
+    operands: list
+    attrs: str
+    raw: str = ""
+
+
+def _split_type_op(rest: str):
+    """Split '<type> <opname>(<operands>)<attrs>' robustly."""
+    # Find the op name: the last bare word before the first '(' that opens
+    # the operand list.  Types may themselves contain parens (tuples), so
+    # scan for ' <word>(' occurrences and take the first whose word is a
+    # plausible op (lowercase alnum/dash).
+    for m in re.finditer(r"\s([a-z][\w\-]*)\(", rest):
+        word = m.group(1)
+        type_str = rest[:m.start()]
+        # types never *end* with a bare lowercase word; accept first match.
+        depth = 0
+        i = m.end() - 1
+        for j in range(i, len(rest)):
+            if rest[j] == "(":
+                depth += 1
+            elif rest[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    operands = rest[i + 1:j]
+                    attrs = rest[j + 1:]
+                    return type_str.strip(), word, operands, attrs
+        break
+    return rest, None, "", ""
+
+
+def parse_computations(text: str) -> dict:
+    """name -> list[Op]; also tags the ENTRY computation as '__entry__'."""
+    comps: dict = {}
+    current = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        header = re.match(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{",
+                          stripped)
+        if header and not stripped.lstrip().startswith("//"):
+            current = header.group(2)
+            comps[current] = []
+            if header.group(1):
+                entry = current
+            continue
+        if stripped.strip() == "}":
+            current = None
+            continue
+        if current is None or "=" not in stripped:
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        type_str, op, operands, attrs = _split_type_op(m.group("rest"))
+        if op is None:
+            continue
+        ops = [o.strip().lstrip("%") for o in re.findall(
+            r"%([\w\.\-]+)", operands)]
+        comps[current].append(Op(m.group("name"), op, type_str, ops, attrs,
+                                 raw=stripped))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry
+    return comps
+
+
+#: the ops whose boundary traffic survives TPU-style fusion: matmuls,
+#: data movement, and collectives.  Elementwise chains fuse away.
+_HBM_OPS = {"dot", "convolution", "gather", "scatter", "dynamic-slice",
+            "dynamic-update-slice", "custom-call", "sort", "reduce",
+            "copy"} | set(COLLECTIVES)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # all-op boundary traffic (unfused bound)
+    bytes_hbm: float = 0.0      # dot/data-movement boundary (fused proxy)
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.bytes_hbm * k,
+                    {c: v * k for c, v in self.coll.items()})
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.bytes_hbm += other.bytes_hbm
+        for c in COLLECTIVES:
+            self.coll[c] += other.coll[c]
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def _trip_count(cond_ops) -> int:
+    """Largest integer constant in the loop condition (the bound)."""
+    best = 1
+    for op in cond_ops:
+        for m in _CONST_RE.finditer(op.raw):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    _, out_dims = _first_array_dims(op.type_str)
+    if out_dims is None:
+        return 0.0
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    contract = 1
+    m = _CONTRACT_RE.search(op.attrs)
+    lhs_dims = shapes.get(op.operands[0]) if op.operands else None
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def analyze(text: str) -> Cost:
+    comps = parse_computations(text)
+    entry = comps["__entry_name__"]
+    memo: dict = {}
+    # fusion-called computations are accounted at their call site boundary
+    # for bytes, but their interior dots still count as flops.
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()          # break cycles defensively
+        ops = comps.get(name, [])
+        shapes = {}
+        sizes = {}
+        for op in ops:
+            _, dims = _first_array_dims(op.type_str)
+            shapes[op.name] = dims
+            sizes[op.name] = _array_bytes(op.type_str)
+        cost = Cost()
+        for op in ops:
+            if op.op in ("parameter", "constant", "get-tuple-element",
+                         "tuple", "bitcast", "after-all", "reshape", None):
+                continue
+            out_b = _array_bytes(op.type_str)
+            in_b = sum(sizes.get(o, 0) for o in op.operands)
+            if op.op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    cost.add(comp_cost(body).scaled(trips))
+                continue
+            if op.op == "conditional":
+                mbr = _BRANCHES_RE.search(op.attrs)
+                if mbr:
+                    branch_costs = [comp_cost(b.strip().lstrip("%"))
+                                    for b in mbr.group(1).split(",")]
+                    if branch_costs:
+                        best = max(branch_costs, key=lambda c: c.flops +
+                                   c.bytes)
+                        cost.add(best)
+                continue
+            if op.op == "call":
+                m2 = re.search(r"to_apply=%?([\w\.\-]+)", op.attrs)
+                if m2:
+                    cost.add(comp_cost(m2.group(1)))
+                continue
+            if op.op in COLLECTIVES:
+                cost.coll[op.op] += out_b
+                cost.bytes += out_b + in_b
+                cost.bytes_hbm += out_b + in_b
+                continue
+            if op.op == "fusion":
+                m2 = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+                if m2:
+                    inner = comp_cost(m2.group(1))
+                    cost.flops += inner.flops      # dots inside fusions
+                    cost.bytes_hbm += inner.bytes_hbm  # dots inside fusions
+                    for c in COLLECTIVES:
+                        cost.coll[c] += inner.coll[c]
+                cost.bytes += out_b + in_b
+                continue
+            if op.op == "dot":
+                cost.flops += _dot_flops(op, shapes)
+                cost.bytes += out_b + in_b
+                cost.bytes_hbm += out_b + in_b
+                continue
+            if op.op == "dynamic-update-slice":
+                # In-place aliased update: traffic = 2 x update slice, not
+                # the whole buffer (which the output type reports).
+                upd = sizes.get(op.operands[1], 0) if len(op.operands) > 1 \
+                    else 0
+                cost.bytes += 2 * upd
+                cost.bytes_hbm += 2 * upd
+                continue
+            if op.op == "dynamic-slice":
+                cost.bytes += 2 * out_b
+                cost.bytes_hbm += 2 * out_b
+                continue
+            if op.op == "gather":
+                cost.bytes += 2 * out_b
+                cost.bytes_hbm += 2 * out_b
+                continue
+            if op.op == "scatter":
+                upd = sizes.get(op.operands[-1], 0)
+                cost.bytes += 2 * upd
+                cost.bytes_hbm += 2 * upd
+                continue
+            if op.op == "copy":
+                cost.bytes += 2 * out_b
+                cost.bytes_hbm += 2 * out_b
+                continue
+            if op.op in _DATA_OPS:
+                cost.bytes += out_b + in_b
+                if op.op in _HBM_OPS:
+                    cost.bytes_hbm += out_b + in_b
+        memo[name] = cost
+        return cost
+
+    return comp_cost(entry) if entry else Cost()

@@ -1,0 +1,113 @@
+"""Hardware constants for the COAXIAL reproduction and the TPU adaptation.
+
+Two worlds live here:
+
+1. The paper's world (DDR5 / PCIe5 / CXL server memory systems, §2, §4, §5).
+   All numbers are lifted directly from the paper text and its Tables 1-3.
+
+2. The TPU v5e world used by the roofline analysis and the queue-aware
+   sharding planner (the paper's insight, transplanted: trade a fixed
+   interface-latency premium for channel-level bandwidth parallelism).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# Paper world: DDR5 / CXL (§2, §4.1, §5 "CXL performance modeling")
+# ---------------------------------------------------------------------------
+
+#: DDR5-4800 peak channel bandwidth, GB/s (paper §2.3, Table 3).
+DDR5_CH_BW_GBPS = 38.4
+#: Approximate unloaded DRAM access latency, ns (paper §3.1: "approximated
+#: unloaded latency of 40ns").
+DRAM_SERVICE_NS = 40.0
+#: Cache line size, bytes.
+CACHE_LINE_B = 64
+#: Simulated core clock, GHz (Table 3).
+CORE_CLK_GHZ = 2.0
+#: Cores in the scaled-down simulated system (Table 3).
+SIM_CORES = 12
+#: Per-core MSHR-ish bound on outstanding misses (256-entry ROB, Table 3).
+MAX_MLP = 16.0
+
+#: Processor pins per interface (paper §2.3, §4.1).
+DDR5_PINS = 160
+PCIE_PINS_PER_LANE = 4
+PCIE_X8_PINS = 8 * PCIE_PINS_PER_LANE  # 32
+
+#: Relative silicon area at TSMC 7nm (paper Table 1, rel. to 1MB L3).
+AREA_L3_PER_MB = 1.0
+AREA_ZEN3_CORE = 6.5
+AREA_PCIE_X8 = 5.9
+AREA_DDR_CH = 10.8
+
+#: CXL x8 link goodput after PCIe/CXL header overheads (paper §4.1, §5).
+CXL_X8_RD_GBPS = 26.0
+CXL_X8_WR_GBPS = 13.0
+#: CXL-asym (20RX/12TX repurposing of the same 32 pins, §4.3).
+CXL_ASYM_RD_GBPS = 32.0
+CXL_ASYM_WR_GBPS = 10.0
+#: Link traversal latencies, ns (paper §5): x8 is 2.5/5.5 RX/TX,
+#: asym is 2/9 RX/TX.  Port adds 12ns per direction.
+CXL_PORT_NS_PER_DIR = 12.0
+CXL_X8_LINK_RX_NS = 2.5
+CXL_X8_LINK_TX_NS = 5.5
+CXL_ASYM_LINK_RX_NS = 2.0
+CXL_ASYM_LINK_TX_NS = 9.0
+#: Default end-to-end CXL interface latency premium, ns (paper §2.4, §5:
+#: "minimum latency overhead of about 30ns"), and the pessimistic
+#: sensitivity point (§6.4).
+CXL_LAT_NS = 30.0
+CXL_LAT_PESSIMISTIC_NS = 50.0
+
+#: Power model constants (paper §6.6, Table 5).
+PKG_POWER_W = 500.0
+DDR_MC_PHY_W_PER_CH = 13.0 / 12.0       # baseline: 13W for 12 channels
+PCIE_LANE_POWER_W = 0.2                  # per lane, PCIe 5.0 [4]
+#: DIMM power, per DDR5 channel: P = static + dynamic * utilization.  The
+#: two coefficients are fitted to the paper's own two anchor points
+#: (200W @ 52% util on 12 ch; 551W @ 21% util on 48 ch) -- see DESIGN.md.
+DIMM_STATIC_W_PER_CH = 7.97
+DIMM_DYN_W_PER_CH = 16.74
+
+# ---------------------------------------------------------------------------
+# TPU v5e world (roofline + planner).
+# ---------------------------------------------------------------------------
+
+#: Peak bf16 matmul throughput per chip, FLOP/s.
+TPU_PEAK_FLOPS = 197e12
+#: HBM bandwidth per chip, bytes/s.
+TPU_HBM_BW = 819e9
+#: ICI bandwidth per link, bytes/s (~50 GB/s/link).
+TPU_ICI_BW_PER_LINK = 50e9
+#: ICI links per chip on a 2D torus mesh (v5e).
+TPU_ICI_LINKS = 4
+#: One-hop ICI latency, seconds (the "CXL premium" of the TPU world).
+TPU_ICI_HOP_S = 1e-6
+#: HBM capacity per chip, bytes (v5e: 16 GiB).
+TPU_HBM_BYTES = 16 * 1024**3
+#: VMEM per core, bytes (v5e ~128 MiB VMEM across the chip; per-core budget
+#: used to size Pallas BlockSpecs conservatively).
+TPU_VMEM_BYTES = 64 * 1024**2
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Roofline-relevant description of one TPU chip + its mesh links."""
+
+    peak_flops: float = TPU_PEAK_FLOPS
+    hbm_bw: float = TPU_HBM_BW
+    ici_bw_per_link: float = TPU_ICI_BW_PER_LINK
+    ici_links: int = TPU_ICI_LINKS
+    ici_hop_s: float = TPU_ICI_HOP_S
+    hbm_bytes: int = TPU_HBM_BYTES
+
+    @property
+    def ici_bw(self) -> float:
+        """Aggregate injection bandwidth of one chip, bytes/s."""
+        return self.ici_bw_per_link * self.ici_links
+
+
+TPU_V5E = TpuSpec()

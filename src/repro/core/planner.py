@@ -1,0 +1,251 @@
+"""Queue-aware channelized-sharding planner: COAXIAL's insight on TPU.
+
+The paper's transferable claim is *not* about DDR pins; it is:
+
+    In a loaded memory system, effective access time = service + queuing;
+    queuing dominates; spreading traffic over N channels at a fixed
+    interface-latency premium reduces both the mean and the variance of
+    access time -- so trade unloaded latency for channel parallelism
+    whenever the system is loaded.
+
+On TPU the analogous trade is between *one chip's HBM* (the local "DDR
+channel") and *N chips' HBM reached over ICI* (the "CXL channels": more
+aggregate bandwidth, plus a fixed per-hop latency premium).  The planner
+evaluates that trade for the bandwidth-hot state of an ML system:
+
+  * :func:`plan_decode_kv` -- shard a KV cache over n sequence shards; each
+    chip streams 1/n of the KV bytes from local HBM and a combine
+    (flash-decode partial-softmax merge) pays the latency premium;
+  * :func:`plan_param_channels` -- FSDP parameter all-gather vs keeping
+    weights replicated (training-side channelization);
+  * :func:`asym_schedule` -- split duplex ICI budget between read-like
+    (all-gather) and write-like (reduce-scatter) traffic according to the
+    step's R:W byte ratio, the §4.3 CXL-asym idea restated for ICI.
+
+Step-time composition uses the same queueing form as the reproduction: when
+several DMA streams share one HBM, the effective memory time is inflated by
+an M/G/1-style contention factor -- the TPU version of Fig 2a.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.hw import TPU_V5E, TpuSpec
+
+#: Burstiness of DMA traffic within a step (weights/activations/KV phases
+#: overlap imperfectly); mild compared to CPU-world kappa.
+DMA_KAPPA = 1.15
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Roofline-style cost of one step under a candidate sharding."""
+
+    name: str
+    compute_s: float
+    hbm_s: float
+    ici_s: float
+    hop_lat_s: float
+
+    @property
+    def total_s(self) -> float:
+        """Bound on step time: overlappable terms take their max; the hop
+        latency is serial (it gates the combine)."""
+        return max(self.compute_s, self.hbm_s, self.ici_s) + self.hop_lat_s
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.hbm_s,
+                 "collective": self.ici_s + self.hop_lat_s}
+        return max(terms, key=terms.get)
+
+
+def contention_factor(rho: float, kappa: float = DMA_KAPPA) -> float:
+    """M/G/1-style inflation of memory time when the HBM channel is loaded.
+
+    Same shape as the reproduction's queue model: at utilization rho the
+    effective service time is inflated by 1 + kappa^2 * rho / (2*(1-rho)).
+    """
+    rho = min(max(rho, 0.0), 0.97)
+    return 1.0 + kappa**2 * rho / (2.0 * (1.0 - rho))
+
+
+def effective_hbm_time(bytes_per_chip: float, spec: TpuSpec = TPU_V5E,
+                       background_rho: float = 0.0) -> float:
+    """Seconds to stream ``bytes_per_chip`` from HBM under contention."""
+    base = bytes_per_chip / spec.hbm_bw
+    return base * contention_factor(background_rho)
+
+
+# ---------------------------------------------------------------------------
+# Channelized KV-cache decode (the paper's §4 trade, on ICI).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    n_channels: int              # sequence shards of the KV cache
+    cost: StepCost
+    baseline: StepCost           # n = 1 (all KV in one chip's HBM)
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline.total_s / self.cost.total_s
+
+
+def decode_step_cost(*, kv_bytes: float, qkv_flops: float,
+                     combine_bytes: float, n: int,
+                     spec: TpuSpec = TPU_V5E,
+                     background_rho: float = 0.0) -> StepCost:
+    """Cost of one decode step with the KV cache spread over n chips.
+
+    kv_bytes      total KV bytes read per step (all layers);
+    qkv_flops     attention flops per step (scales 1/n per chip);
+    combine_bytes bytes exchanged to merge partial attention outputs
+                  (per merge stage; log2(n) tree stages).
+    """
+    stages = math.ceil(math.log2(n)) if n > 1 else 0
+    hbm = effective_hbm_time(kv_bytes / n, spec, background_rho)
+    ici = stages * combine_bytes / spec.ici_bw if n > 1 else 0.0
+    hop = stages * spec.ici_hop_s
+    return StepCost(name=f"kv-channels={n}", compute_s=qkv_flops / n /
+                    spec.peak_flops, hbm_s=hbm, ici_s=ici, hop_lat_s=hop)
+
+
+def plan_decode_kv(*, kv_bytes: float, qkv_flops: float,
+                   combine_bytes: float, max_channels: int = 16,
+                   spec: TpuSpec = TPU_V5E,
+                   background_rho: float = 0.0) -> DecodePlan:
+    """Pick the KV channel count minimizing decode step time.
+
+    This is COAXIAL's Fig 2a argument verbatim: more channels cut the
+    memory term ~1/n while adding a fixed per-stage latency premium; the
+    optimum moves to larger n exactly when the memory system is loaded
+    (large kv_bytes or high background utilization).
+    """
+    candidates = [1]
+    while candidates[-1] * 2 <= max_channels:
+        candidates.append(candidates[-1] * 2)
+    costs = [decode_step_cost(kv_bytes=kv_bytes, qkv_flops=qkv_flops,
+                              combine_bytes=combine_bytes, n=n, spec=spec,
+                              background_rho=background_rho)
+             for n in candidates]
+    best = min(range(len(costs)), key=lambda i: costs[i].total_s)
+    return DecodePlan(n_channels=candidates[best], cost=costs[best],
+                      baseline=costs[0])
+
+
+# ---------------------------------------------------------------------------
+# Training-side: FSDP parameter channels.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamPlan:
+    shards: int
+    cost: StepCost
+    baseline: StepCost
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline.total_s / self.cost.total_s
+
+
+def plan_param_channels(*, param_bytes: float, step_flops_per_chip: float,
+                        layers: int, shard_candidates=(1, 2, 4, 8, 16),
+                        state_bytes_factor: float = 7.0,
+                        hbm_budget_bytes: float | None = None,
+                        spec: TpuSpec = TPU_V5E) -> ParamPlan:
+    """Replicated weights (1 channel) vs FSDP-sharded over n chips.
+
+    Replicated: every chip streams the full param_bytes from local HBM each
+    step.  Sharded over n: each chip stores 1/n, and an all-gather streams
+    the same bytes over ICI (overlapped per layer).
+
+    Unlike the KV-cache case, *every* chip consumes every parameter, so
+    channelizing cannot multiply the usable bandwidth -- ICI (~200 GB/s) is
+    slower than local HBM (819 GB/s) and replication wins on pure time.
+    FSDP is a CAPACITY play: a candidate is infeasible when its resident
+    bytes (params + optimizer states, ``state_bytes_factor`` x params in
+    fp32 master/mu/nu terms) exceed the HBM budget.  The planner encodes
+    both sides of the trade; the COAXIAL bandwidth argument applies to
+    state that *stays local after sharding* (KV, experts), not to
+    broadcast-consumed state.
+    """
+    budget = hbm_budget_bytes if hbm_budget_bytes is not None \
+        else 0.8 * spec.hbm_bytes
+    costs = []
+    feasible = []
+    for n in shard_candidates:
+        resident = param_bytes * (1.0 + state_bytes_factor) / n
+        if n == 1:
+            hbm = effective_hbm_time(param_bytes, spec)
+            c = StepCost("replicated", step_flops_per_chip /
+                         spec.peak_flops, hbm, 0.0, 0.0)
+        else:
+            hbm = effective_hbm_time(param_bytes / n, spec)
+            ici = param_bytes * (n - 1) / n / spec.ici_bw
+            hop = layers * spec.ici_hop_s
+            c = StepCost(f"fsdp={n}", step_flops_per_chip /
+                         spec.peak_flops, hbm, ici, hop)
+        costs.append(c)
+        feasible.append(resident <= budget)
+    idx = [i for i in range(len(costs)) if feasible[i]]
+    if not idx:
+        idx = [len(costs) - 1]      # largest sharding is the last resort
+    best = min(idx, key=lambda i: costs[i].total_s)
+    return ParamPlan(shards=shard_candidates[best], cost=costs[best],
+                     baseline=costs[0])
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric collective schedule (CXL-asym, §4.3, restated for duplex ICI).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AsymSchedule:
+    read_fraction: float        # share of overlap window given to all-gather
+    write_fraction: float       # share given to reduce-scatter
+    read_bytes: float
+    write_bytes: float
+
+    @property
+    def rw_ratio(self) -> float:
+        return self.read_bytes / max(self.write_bytes, 1.0)
+
+
+def asym_schedule(read_bytes: float, write_bytes: float) -> AsymSchedule:
+    """Split the duplex-ICI overlap budget by the step's R:W byte ratio.
+
+    PCIe mandates 1:1 RX/TX lanes; the paper shows memory traffic is 2:1 to
+    3:1 R:W and gains 15% from asymmetric provisioning.  ICI links are
+    duplex, but the *scheduling window* (how early the next layer's
+    parameter all-gather is prefetched vs how late the gradient
+    reduce-scatter is drained) is the software analogue: we provision the
+    overlap budget proportionally to demand instead of 1:1.
+    """
+    total = read_bytes + write_bytes
+    if total <= 0:
+        return AsymSchedule(0.5, 0.5, read_bytes, write_bytes)
+    rf = read_bytes / total
+    return AsymSchedule(read_fraction=rf, write_fraction=1.0 - rf,
+                        read_bytes=read_bytes, write_bytes=write_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (shared by launch/dryrun.py and benchmarks/roofline.py).
+# ---------------------------------------------------------------------------
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, chips: int,
+                   spec: TpuSpec = TPU_V5E) -> dict:
+    """The three §Roofline terms, in seconds (whole-step, per the spec)."""
+    compute_s = hlo_flops / (chips * spec.peak_flops)
+    memory_s = hlo_bytes / (chips * spec.hbm_bw)
+    collective_s = collective_bytes / (chips * spec.ici_bw_per_link)
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                            key=lambda k: terms[k])
+    terms["bound_s"] = max(compute_s, memory_s, collective_s)
+    return terms

@@ -1,0 +1,185 @@
+"""The paper's 35 evaluated workloads (Table 4) + memory-behavior parameters.
+
+Table 4 gives, per workload, the IPC and LLC MPKI measured on the DDR-based
+baseline (12 OoO cores @ 2GHz, one DDR5-4800 channel).  Those two columns are
+copied verbatim below and are the *calibration anchors* of the reproduction:
+the CPU model (cpu_model.py) is constrained to reproduce them exactly on the
+baseline configuration.
+
+The remaining columns are behavioral parameters the paper describes
+qualitatively (§3.1, §6.1, §6.2) but does not tabulate.  They are set from
+suite-level defaults plus per-workload overrides wherever the paper gives
+direct evidence:
+
+  wb         write-back traffic per read (R:W ratios are 2:1-3:1 per §4.3;
+             stream copy/scale are 1:1; kmeans has "near-zero write traffic").
+  kappa      burst peak-to-mean arrival ratio (§6.2: bwaves is "bursty",
+             incurring queuing spikes at only 32% average utilization).
+  eta        bank/channel balance factor (§6.2: kmeans has an "even
+             distribution of accesses over time and across DRAM banks";
+             regular-strided workloads queue far less than random traffic).
+  exec_frac  fraction of baseline CPI that is non-memory (used to calibrate
+             the per-workload effective MLP; streaming kernels are ~all
+             memory, pop2/raytrace are mostly compute).
+  gamma      sensitivity of the stall per miss to latency *variance* (§3.2);
+             high for dependent-access workloads ("heavy dependencies among
+             memory accesses" is the paper's stated cause of regressions).
+  ws_mb      approximate per-instance working set, for LLC-fit corner cases
+             (§6.5: xalancbmk fits in the LLC when one instance runs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    suite: str
+    ipc: float        # Table 4, per-core IPC on the loaded DDR baseline
+    mpki: float       # Table 4, LLC misses per kilo-instruction
+    wb: float         # write-back bytes per read byte
+    kappa: float      # burst peak-to-mean arrival-rate ratio (>= 1)
+    eta: float        # bank/channel balance factor (<= 1)
+    exec_frac: float  # non-memory share of baseline CPI
+    gamma: float      # stall sensitivity to latency stdev
+    pf_boost: float   # extra MLP from prefetchers when bandwidth is free
+    ws_mb: float      # per-instance working set (MB)
+
+
+def _w(name, suite, ipc, mpki, *, wb, kappa, eta, exec_frac, gamma,
+       pf_boost=0.0, ws_mb=512.0):
+    return Workload(name, suite, ipc, mpki, wb=wb, kappa=kappa, eta=eta,
+                    exec_frac=exec_frac, gamma=gamma, pf_boost=pf_boost,
+                    ws_mb=ws_mb)
+
+
+# Suite defaults: (wb, kappa, eta, exec_frac, gamma)
+_LIGRA = dict(wb=0.30, kappa=1.5, eta=0.85, exec_frac=0.20, gamma=0.35,
+              pf_boost=0.8)
+_SPEC = dict(wb=0.50, kappa=1.3, eta=0.80, exec_frac=0.45, gamma=0.40,
+             pf_boost=1.0)
+_PARSEC = dict(wb=0.40, kappa=1.6, eta=0.55, exec_frac=0.60, gamma=0.55,
+               pf_boost=0.3)
+
+
+WORKLOADS: tuple[Workload, ...] = (
+    # --- Ligra graph analytics (12) -------------------------------------
+    _w("pagerank", "ligra", 0.36, 40, **_LIGRA),
+    _w("pagerank-delta", "ligra", 0.31, 27, **_LIGRA),
+    _w("components-shortcut", "ligra", 0.34, 48, **_LIGRA),
+    _w("components", "ligra", 0.36, 48, **_LIGRA),
+    _w("bc", "ligra", 0.33, 34, **_LIGRA),
+    _w("radii", "ligra", 0.41, 33, **_LIGRA),
+    _w("bfscc", "ligra", 0.68, 17, **{**_LIGRA, "exec_frac": 0.30}),
+    _w("bfs", "ligra", 0.69, 15, **{**_LIGRA, "exec_frac": 0.30}),
+    _w("bfs-bitvector", "ligra", 0.84, 15, **{**_LIGRA, "exec_frac": 0.30}),
+    _w("bellmanford", "ligra", 0.86, 9, **{**_LIGRA, "exec_frac": 0.35}),
+    _w("triangle", "ligra", 0.65, 21, **{**_LIGRA, "exec_frac": 0.30}),
+    _w("mis", "ligra", 1.37, 8, **{**_LIGRA, "exec_frac": 0.50,
+                                   "gamma": 0.25}),
+    # --- STREAM (4): independent streaming, MSHRs saturated --------------
+    _w("stream-copy", "stream", 0.17, 58, wb=0.40, kappa=1.5, eta=1.0,
+       exec_frac=0.05, gamma=0.05, pf_boost=1.5, ws_mb=4096),
+    _w("stream-scale", "stream", 0.21, 48, wb=0.40, kappa=1.5, eta=1.0,
+       exec_frac=0.05, gamma=0.05, pf_boost=1.5, ws_mb=4096),
+    _w("stream-add", "stream", 0.16, 69, wb=0.33, kappa=1.5, eta=1.0,
+       exec_frac=0.05, gamma=0.05, pf_boost=1.5, ws_mb=4096),
+    _w("stream-triad", "stream", 0.18, 59, wb=0.33, kappa=1.5, eta=1.0,
+       exec_frac=0.05, gamma=0.05, pf_boost=1.5, ws_mb=4096),
+    # --- SPEC-speed 2017 (12) -------------------------------------------
+    # lbm: stream-like, 91% of latency is queuing (paper §3.1/Fig 5).
+    _w("lbm", "spec", 0.14, 64, wb=0.5, kappa=1.5, eta=1.0, exec_frac=0.05,
+       gamma=0.05, pf_boost=1.5, ws_mb=2048),
+    # bwaves: bursty -- ~390ns queuing at only ~32% utilization (§6.2).
+    _w("bwaves", "spec", 0.33, 14, wb=0.5, kappa=3.2, eta=1.0,
+       exec_frac=0.30, gamma=0.20, pf_boost=1.0),
+    _w("cactusbssn", "spec", 0.68, 8, **{**_SPEC, "exec_frac": 0.50,
+                                         "gamma": 0.30}),
+    _w("fotonik3d", "spec", 0.33, 22, **{**_SPEC, "wb": 0.6, "eta": 0.9,
+                                         "exec_frac": 0.25, "gamma": 0.20,
+                                         "pf_boost": 1.5}),
+    _w("cam4", "spec", 0.87, 6, **{**_SPEC, "exec_frac": 0.60}),
+    _w("wrf", "spec", 0.61, 11, **_SPEC),
+    # mcf / omnetpp / xalancbmk: pointer-heavy, dependence-dominated.
+    _w("mcf", "spec", 0.793, 13, wb=0.3, kappa=1.3, eta=0.7, exec_frac=0.50,
+       gamma=0.55, pf_boost=0.0),
+    _w("roms", "spec", 0.783, 6, **{**_SPEC, "exec_frac": 0.55}),
+    _w("pop2", "spec", 1.55, 3, **{**_SPEC, "exec_frac": 0.70}),
+    _w("omnetpp", "spec", 0.51, 10, wb=0.3, kappa=1.3, eta=0.6,
+       exec_frac=0.50, gamma=0.60, pf_boost=0.0),
+    _w("xalancbmk", "spec", 0.55, 12, wb=0.3, kappa=1.3, eta=0.6,
+       exec_frac=0.50, gamma=0.50, pf_boost=0.0, ws_mb=10.0),
+    # gcc: low-moderate traffic + heavy dependencies -> worst regression.
+    _w("gcc", "spec", 0.31, 19, wb=0.3, kappa=1.0, eta=0.10,
+       exec_frac=0.05, gamma=0.65, pf_boost=0.0),
+    # --- PARSEC (5) -------------------------------------------------------
+    _w("fluidanimate", "parsec", 0.78, 7, **_PARSEC),
+    _w("facesim", "parsec", 0.74, 6, **_PARSEC),
+    _w("raytrace", "parsec", 1.17, 5, **{**_PARSEC, "exec_frac": 0.65,
+                                         "gamma": 0.40}),
+    # streamcluster: mean 69ns / stdev 88ns baseline; 76/76 on COAXIAL
+    # (§6.2) -- balanced-ish mean but bank-imbalance variance.
+    _w("streamcluster", "parsec", 0.99, 14, wb=0.40, kappa=1.0, eta=0.05,
+       exec_frac=0.35, gamma=0.80, pf_boost=0.5),
+    _w("canneal", "parsec", 0.66, 7, **{**_PARSEC, "eta": 0.6,
+                                        "exec_frac": 0.50, "gamma": 0.5}),
+    # --- KVS & data analytics (2) ----------------------------------------
+    _w("masstree", "kvs", 0.37, 21, wb=0.30, kappa=1.6, eta=0.85,
+       exec_frac=0.40, gamma=0.50, pf_boost=0.0),
+    # kmeans: highest utilization yet ~50ns queuing; near-zero writes (§6.2).
+    _w("kmeans", "kvs", 0.50, 36, wb=0.05, kappa=1.0, eta=0.13,
+       exec_frac=0.30, gamma=0.15, pf_boost=1.5, ws_mb=2048),
+)
+
+
+NAMES = tuple(w.name for w in WORKLOADS)
+SUITES = tuple(sorted({w.suite for w in WORKLOADS}))
+
+
+def by_name(name: str) -> Workload:
+    for w in WORKLOADS:
+        if w.name == name:
+            return w
+    raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadArrays:
+    """Structure-of-arrays view for vectorized evaluation."""
+
+    name: tuple
+    ipc: np.ndarray
+    mpki: np.ndarray
+    wb: np.ndarray
+    kappa: np.ndarray
+    eta: np.ndarray
+    exec_frac: np.ndarray
+    gamma: np.ndarray
+    pf_boost: np.ndarray
+    ws_mb: np.ndarray
+
+    def __len__(self):
+        return len(self.name)
+
+
+jax.tree_util.register_dataclass(
+    WorkloadArrays,
+    data_fields=["ipc", "mpki", "wb", "kappa", "eta", "exec_frac", "gamma",
+                 "pf_boost", "ws_mb"],
+    meta_fields=["name"],
+)
+
+
+def as_arrays(workloads=WORKLOADS) -> WorkloadArrays:
+    f = lambda attr: np.array([getattr(w, attr) for w in workloads], np.float64)
+    return WorkloadArrays(
+        name=tuple(w.name for w in workloads),
+        ipc=f("ipc"), mpki=f("mpki"), wb=f("wb"), kappa=f("kappa"),
+        eta=f("eta"), exec_frac=f("exec_frac"), gamma=f("gamma"),
+        pf_boost=f("pf_boost"), ws_mb=f("ws_mb"),
+    )

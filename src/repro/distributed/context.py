@@ -1,0 +1,102 @@
+"""Activation-sharding context: constraint injection without config plumbing.
+
+Model code calls ``constrain(x, ("batch", "seq", "embed"))`` at layer
+boundaries; by default it is a no-op.  The launcher (train.py / dryrun.py)
+activates rules for the duration of tracing:
+
+    with activation_rules(mesh, {"batch": ("pod", "data"), "seq": "model"}):
+        lowered = jax.jit(step, ...).lower(...)
+
+The headline use is Megatron-style sequence parallelism of the residual
+stream: sharding the scan carry's sequence axis over ``model`` divides the
+per-chip activation stash by the model-axis size -- the hillclimb move that
+brings the big train cells under HBM (EXPERIMENTS.md §Perf) at the price of
+attention-time gather collectives.  The same trade as the paper's: memory
+capacity/bandwidth bought with interconnect latency.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(mesh, rules: dict):
+    """Enable logical->mesh activation constraints while tracing."""
+    old = getattr(_STATE, "value", None)
+    _STATE.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.value = old
+
+
+def fsdp_gather_active() -> bool:
+    state = getattr(_STATE, "value", None)
+    return bool(state and state[1].get("fsdp_gather"))
+
+
+def flag(name: str) -> bool:
+    state = getattr(_STATE, "value", None)
+    return bool(state and state[1].get(name))
+
+
+def use_params(tree: dict, spec_map: dict):
+    """Constrain parameter *use* sites to their gathered (FSDP-unsharded)
+    layout: embed-dim replicated, TP dims kept on ``model``.
+
+    This pins GSPMD to the canonical FSDP lowering -- all-gather the layer's
+    WEIGHTS (megabytes) instead of resharding ACTIVATIONS (gigabytes); see
+    EXPERIMENTS.md §Perf, hypothesis H1.  No-op unless the active rules set
+    ``fsdp_gather``.
+    """
+    state = getattr(_STATE, "value", None)
+    if not state or not state[1].get("fsdp_gather"):
+        return tree
+    mesh, _ = state
+    out = dict(tree)
+    for name, parts in spec_map.items():
+        if name not in out:
+            continue
+        x = out[name]
+        fixed = []
+        for dim, part in zip(x.shape, parts):
+            if part is None:
+                fixed.append(None)
+                continue
+            size = mesh.shape[part] if isinstance(part, str) else 1
+            fixed.append(part if dim % size == 0 else None)
+        out[name] = jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed)))
+    return out
+
+
+def constrain(x, logical_axes: tuple):
+    """Apply the active sharding constraint to ``x`` (no-op by default)."""
+    state = getattr(_STATE, "value", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    parts = []
+    for dim, name in zip(x.shape, logical_axes):
+        axes = rules.get(name)
+        if axes is None:
+            parts.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size != 0:
+            parts.append(None)
+        else:
+            parts.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,163 @@
+"""Logical-axis -> mesh sharding rules (MaxText-style), per arch x shape.
+
+Parameters and activations carry *logical* axis names (see models/layers.py
+Specs); this module maps them onto the physical mesh:
+
+  * ``data`` mesh axis (plus ``pod`` when multi-pod): FSDP -- parameters are
+    sharded along their ``embed`` dimension and all-gathered per layer;
+    batch dims of activations are data-parallel over the same axis.
+  * ``model`` mesh axis: tensor parallelism over heads / mlp / vocab /
+    experts, and -- the COAXIAL move -- the *sequence* axis of decode KV
+    caches (``kv_seq``), spreading KV-cache bytes over N chips' HBM
+    (channelized sharding, DESIGN.md §3).
+
+Rules drop a mesh axis per-tensor whenever the dimension does not divide by
+the axis size (e.g. hubert's vocab of 504 on a 16-way model axis) -- GSPMD
+could pad, but undivisible shards are never what we want at scale.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+
+def fsdp_axes(mesh: Mesh):
+    """The mesh axes used for data/FSDP sharding ('pod' folds into it)."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+#: logical name -> mesh axes, training rules.  None = replicated.
+def train_rules(mesh: Mesh, cfg: ModelConfig) -> dict:
+    fsdp = fsdp_axes(mesh)
+    rules = {
+        "embed": fsdp,             # FSDP: shard params along d_model
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),     # EP
+        "layers": None,
+        "experts_router": None,
+        "ssm_inner": None,
+        "conv": None,
+        "rank": None,
+        "mix": None,
+        "frontend": None,
+    }
+    if cfg.family == "moe":
+        # EP owns the model axis; per-expert mats replicated across it.
+        rules["mlp"] = None
+    return rules
+
+
+def decode_rules(mesh: Mesh, cfg: ModelConfig) -> dict:
+    """Serving rules: weights TP-sharded; FSDP gathering at every decode
+    step would be latency-poison, so ``embed`` stays replicated and the
+    batch axis carries data parallelism."""
+    rules = train_rules(mesh, cfg)
+    rules = dict(rules, embed=None)
+    return rules
+
+
+def spec_for(shape, axes, rules, mesh) -> P:
+    parts = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = rules.get(name)
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        if dim % axis_size(mesh, mesh_axes) != 0:
+            parts.append(None)          # undivisible -> replicate
+        else:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*parts)
+
+
+def param_shardings(model: Model, mesh: Mesh, rules: dict):
+    """NamedSharding pytree matching the model's parameter tree."""
+    from repro.models import layers as L
+    specs = model.specs()
+
+    def one(spec):
+        pspec = spec_for(spec.shape, spec.axes, rules, mesh)
+        return NamedSharding(mesh, pspec)
+
+    return jax.tree_util.tree_map(one, specs, is_leaf=L.is_spec)
+
+
+def batch_shardings(mesh: Mesh, batch_tree) -> dict:
+    """Batch dims shard over (pod+)data; everything else replicated."""
+    fsdp = fsdp_axes(mesh)
+    fa = fsdp if len(fsdp) > 1 else fsdp[0]
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] % axis_size(mesh, fsdp) != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*((fa,) + (None,) * (nd - 1))))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
+                    kv_channels: bool = True) -> dict:
+    """Decode-cache shardings.
+
+    KV tensors (layers/groups, B, S, Hk, hd): batch over (pod+)data and --
+    when ``kv_channels`` -- sequence over ``model``: the channelized layout
+    where each chip owns 1/N of the context and streams only local HBM.
+    SSM states (small, per-sequence) shard over batch only.
+    """
+    fsdp = fsdp_axes(mesh)
+    fa = fsdp if len(fsdp) > 1 else fsdp[0]
+    data_n = axis_size(mesh, fsdp)
+    model_n = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if nd <= 1:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v"):
+            seq = leaf.shape[2]
+            batch_ok = leaf.shape[1] % data_n == 0
+            seq_ok = kv_channels and seq % model_n == 0
+            return NamedSharding(mesh, P(
+                None, fa if batch_ok else None,
+                "model" if seq_ok else None, None, None))
+        # ssm_state / conv / shift states: (L, B, ...)
+        batch_ok = leaf.shape[1] % data_n == 0
+        return NamedSharding(
+            mesh, P(*((None, fa if batch_ok else None) +
+                      (None,) * (nd - 2))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)

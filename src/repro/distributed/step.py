@@ -1,0 +1,104 @@
+"""Jitted, sharded train/serve step factories.
+
+``make_train_step`` wires value_and_grad -> (optional int8 error-feedback
+gradient compression) -> AdamW, as one pjit-compiled function whose in/out
+shardings come from the logical-axis rules.  ``make_serve_step`` is the
+one-token decode step the ``decode_*`` / ``long_*`` dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw, compression
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    compress_grads: bool = False
+    param_dtype: str = "bfloat16"
+    #: gradient-accumulation microbatches per step (1 = off).  Divides the
+    #: per-chip activation working set by the same factor -- the memory-
+    #: capacity lever for the biggest train cells (EXPERIMENTS.md §Perf H3).
+    microbatch: int = 1
+
+
+def init_train_state(model: Model, key, step_cfg: TrainStepConfig):
+    params = model.init(key)
+    state = dict(params=params, opt=adamw.init(params),
+                 step=jnp.zeros((), jnp.int32))
+    if step_cfg.compress_grads:
+        state["ef"] = compression.init_error_feedback(params)
+    return state
+
+
+def train_state_specs(model: Model, step_cfg: TrainStepConfig):
+    """ShapeDtypeStructs of the train state (no allocation; dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0), step_cfg))
+
+
+def make_train_step(model: Model, step_cfg: TrainStepConfig):
+    param_dtype = {"bfloat16": jnp.bfloat16,
+                   "float32": jnp.float32}[step_cfg.param_dtype]
+
+    def train_step(state, batch):
+        if step_cfg.microbatch > 1:
+            m = step_cfg.microbatch
+
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            mbatches = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+            def micro(acc, mb):
+                (l, _), g = jax.value_and_grad(
+                    model.loss, has_aux=True)(state["params"], mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / m, acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(micro, zero, mbatches)
+            metrics = {"loss": losses.mean()}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(state["params"], batch)
+        if step_cfg.compress_grads:
+            # Quantize (with error feedback) before the DP reduction: the
+            # reduce-scatter moves int8 + scales instead of fp32.
+            comp, new_ef = compression.compress(grads, state["ef"])
+            grads = compression.decompress(comp)
+        new_params, new_opt, opt_metrics = adamw.update(
+            step_cfg.opt, grads, state["opt"], state["step"],
+            param_dtype=param_dtype)
+        new_state = dict(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        if step_cfg.compress_grads:
+            new_state["ef"] = new_ef
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, step_batch, cache):
+        return model.decode_step(params, step_batch, cache)
+
+    return serve_step
+
+
+def make_prefill(model: Model):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill

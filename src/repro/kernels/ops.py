@@ -1,0 +1,49 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On a TPU runtime these dispatch the compiled kernels; everywhere else
+(CPU CI, this container) they run interpret=True, which executes the same
+kernel body in Python -- bit-for-bit the algorithm the TPU runs, minus the
+hardware.  ``on_tpu()`` picks automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_attn as _da
+from repro.kernels import rwkv_wkv as _wkv
+from repro.kernels import stream as _stream
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def stream_copy(a):
+    return _stream.stream_copy(a, interpret=_interp())
+
+
+def stream_scale(a, alpha):
+    return _stream.stream_scale(a, alpha, interpret=_interp())
+
+
+def stream_add(a, b):
+    return _stream.stream_add(a, b, interpret=_interp())
+
+
+def stream_triad(a, b, alpha):
+    return _stream.stream_triad(a, b, alpha, interpret=_interp())
+
+
+def decode_attn(q, k, v, length, block_s: int = _da.BLOCK_S):
+    return _da.decode_attn(q, k, v, length, block_s=block_s,
+                           interpret=_interp())
+
+
+def wkv(r, k, v, w, u, state, block_t: int = _wkv.BLOCK_T):
+    return _wkv.wkv(r, k, v, w, u, state, block_t=block_t,
+                    interpret=_interp())

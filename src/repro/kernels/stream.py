@@ -1,0 +1,93 @@
+"""STREAM kernels (copy / scale / add / triad) as Pallas TPU kernels.
+
+The paper runs STREAM as its bandwidth-roofline probe (§5); these are the
+TPU-native equivalents and double as the framework's HBM-bandwidth
+microbenchmarks.  Each kernel is purely bandwidth-bound: the BlockSpec
+tiling streams (BLOCK_M, LANES)-sized tiles HBM->VMEM->HBM with zero
+arithmetic intensity beyond the axpy, so achieved bytes/s vs. 819 GB/s *is*
+the memory roofline term.
+
+Tiling: last dim is a multiple of 128 lanes; rows tile by BLOCK_M=512 so a
+tile is 512x128x4B = 256 KiB -- three tiles (two in, one out) stay well
+under the ~16 MiB/core VMEM budget while deep enough to hide DMA latency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 512
+LANES = 128
+
+
+def _grid_spec(shape, n_in):
+    m, n = shape
+    bm = min(BLOCK_M, m)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, LANES))
+    spec = pl.BlockSpec((bm, LANES), lambda i, j: (i, j))
+    return grid, [spec] * n_in, spec
+
+
+def _copy_kernel(a_ref, o_ref):
+    o_ref[...] = a_ref[...]
+
+
+def _scale_kernel(alpha_ref, a_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * a_ref[...]
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(alpha_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + alpha_ref[0] * b_ref[...]
+
+
+def _call(kernel, arrays, scalars=(), interpret=False):
+    shape = arrays[0].shape
+    grid, in_specs, out_spec = _grid_spec(shape, len(arrays))
+    scalar_specs = [pl.BlockSpec(memory_space=pl.ANY)] * 0
+    if scalars:
+        # scalars ride along as (1,)-shaped SMEM-ish inputs
+        in_specs = [pl.BlockSpec((1,), lambda i, j: (0,))] * len(scalars) \
+            + in_specs
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape, arrays[0].dtype),
+        interpret=interpret,
+    )(*scalars, *arrays)
+
+
+def stream_copy(a, *, interpret=False):
+    return _call(_copy_kernel, (a,), interpret=interpret)
+
+
+def stream_scale(a, alpha, *, interpret=False):
+    alpha = jnp.asarray([alpha], a.dtype)
+    return _call(_scale_kernel, (a,), (alpha,), interpret=interpret)
+
+
+def stream_add(a, b, *, interpret=False):
+    return _call(_add_kernel, (a, b), interpret=interpret)
+
+
+def stream_triad(a, b, alpha, *, interpret=False):
+    alpha = jnp.asarray([alpha], a.dtype)
+    return _call(_triad_kernel, (a, b), (alpha,), interpret=interpret)
+
+
+def stream_bytes(name: str, shape, dtype=jnp.float32) -> int:
+    """Bytes moved per invocation (for roofline accounting)."""
+    n = 1
+    for d in shape:
+        n *= d
+    per = jnp.dtype(dtype).itemsize
+    return {"copy": 2, "scale": 2, "add": 3, "triad": 3}[name] * n * per

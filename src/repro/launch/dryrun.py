@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run may fake 512 host devices (smoke tests and
+benches see the real single device).
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod);
+  2. builds ShapeDtypeStruct stand-ins for every input (no allocation);
+  3. jit-lowers the train_step (train/prefill shapes) or serve_step
+     (decode shapes) with the full sharding rules;
+  4. ``.compile()``s it -- sharding mismatches, unsupported collectives or
+     partitioning bugs fail HERE, which is the point;
+  5. records memory_analysis / cost_analysis / per-collective bytes parsed
+     from the compiled HLO into results/dryrun/<cell>.json for the
+     roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k \
+      [--multi-pod] [--kv-channels N] [--remat dots]
+  python -m repro.launch.dryrun --all [--multi-pod]   # every cell, in-proc
+"""
+
+import argparse
+import contextlib
+import dataclasses
+import json
+import re
+import sys
+import time
+
+_nullcontext = contextlib.nullcontext
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_status, get_config, get_shape
+from repro.core import hloparse
+from repro.distributed import context
+from repro.distributed import sharding as shd
+from repro.distributed.step import (TrainStepConfig, make_serve_step,
+                                    make_train_step, train_state_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model, batch_spec, decode_batch_spec
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device output bytes of every collective op in the HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        size = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        out[op] += size
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins + shardings for one cell's inputs."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = Model(cfg)
+    n_data = shd.axis_size(mesh, shd.fsdp_axes(mesh))
+
+    if shape.kind in ("train", "prefill"):
+        batch = batch_spec(cfg, shape.global_batch, shape.seq_len)
+        return dict(kind="train", batch=batch)
+    # decode: one new token against a seq_len cache
+    step_batch = decode_batch_spec(cfg, shape.global_batch)
+    cache = jax.eval_shape(
+        lambda: model.make_cache(shape.global_batch, shape.seq_len))
+    return dict(kind="decode", batch=step_batch, cache=cache)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    seconds: float = 0.0
+    flops_per_chip: float = 0.0       # loop-scaled, from hloparse
+    bytes_per_chip: float = 0.0       # loop-scaled op-boundary proxy
+    hbm_bytes_per_chip: float = 0.0   # loop-scaled fused-boundary proxy
+    xla_flops: float = 0.0            # raw cost_analysis (loop bodies x1)
+    xla_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    memory: dict = dataclasses.field(default_factory=dict)
+    chips: int = 0
+    error: str = ""
+    variant: str = "baseline"
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat: str | None = None, kv_channels: bool = True,
+             compress_grads: bool = False, act_shard: str = "none",
+             fsdp_gather: bool = False, microbatch: int = 1,
+             kv_select_update: bool = False,
+             variant: str = "baseline") -> CellResult:
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    status = cell_status(cfg, shape)
+    res = CellResult(arch=arch, shape=shape_name, mesh=mesh_name,
+                     status=status, variant=variant)
+    if status != "ok":
+        return res
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    res.chips = mesh.size
+    model = Model(cfg)
+
+    from repro.distributed.sharding import fsdp_axes
+    act_rules = {"batch": fsdp_axes(mesh)}
+    if act_shard == "seq":
+        act_rules["seq"] = "model"
+    if fsdp_gather:
+        act_rules["fsdp_gather"] = True
+    if kv_select_update:
+        act_rules["kv_select_update"] = True
+        act_rules["kv_partials"] = True
+        act_rules["kv_seq"] = "model"
+    ctx = (context.activation_rules(mesh, act_rules)
+           if (act_shard != "none" or fsdp_gather or kv_select_update)
+           else _nullcontext())
+    try:
+      with ctx:
+        if shape.kind in ("train", "prefill"):
+            rules = shd.train_rules(mesh, cfg)
+            step_cfg = TrainStepConfig(compress_grads=compress_grads,
+                                       microbatch=microbatch)
+            state_specs = train_state_specs(model, step_cfg)
+            p_sh = shd.param_shardings(model, mesh, rules)
+            state_sh = dict(
+                params=p_sh,
+                opt=dict(master=p_sh, mu=p_sh, nu=p_sh),
+                step=shd.replicated(mesh, state_specs["step"]))
+            if compress_grads:
+                state_sh["ef"] = p_sh
+            batch = batch_spec(cfg, shape.global_batch, shape.seq_len)
+            b_sh = shd.batch_shardings(mesh, batch)
+            fn = make_train_step(model, step_cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(state_sh, b_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,)).lower(state_specs, batch)
+        else:
+            rules = shd.decode_rules(mesh, cfg)
+            p_sh = shd.param_shardings(model, mesh, rules)
+            params_specs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            step_batch = decode_batch_spec(cfg, shape.global_batch)
+            cache = jax.eval_shape(
+                lambda: model.make_cache(shape.global_batch, shape.seq_len))
+            b_sh = shd.batch_shardings(mesh, step_batch)
+            c_sh = shd.cache_shardings(cfg, mesh, cache,
+                                       kv_channels=kv_channels)
+            fn = make_serve_step(model)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, b_sh, c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,)).lower(
+                    params_specs, step_batch, cache)
+        compiled = lowered.compile()
+        res.seconds = time.time() - t0
+
+        ca = compiled.cost_analysis() or {}
+        # cost_analysis is per-device for SPMD modules -- but counts while
+        # bodies once; hloparse re-derives loop-scaled totals.
+        res.xla_flops = float(ca.get("flops", 0.0))
+        res.xla_bytes = float(ca.get("bytes accessed", 0.0))
+        hlo_text = compiled.as_text()
+        cost = hloparse.analyze(hlo_text)
+        res.flops_per_chip = float(cost.flops)
+        res.bytes_per_chip = float(cost.bytes)
+        res.hbm_bytes_per_chip = float(cost.bytes_hbm)
+        try:
+            ma = compiled.memory_analysis()
+            res.memory = dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                alias_bytes=int(ma.alias_size_in_bytes),
+            )
+        except Exception as e:      # pragma: no cover
+            res.memory = dict(error=str(e))
+        res.collectives = dict(cost.coll, total=cost.coll_total,
+                               unscaled=collective_bytes(hlo_text))
+    except Exception as e:          # noqa: BLE001 -- record, don't crash --all
+        res.status = "error"
+        res.error = f"{type(e).__name__}: {e}"[:2000]
+        res.seconds = time.time() - t0
+    return res
+
+
+def result_path(res: CellResult) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = f"{res.arch}__{res.shape}__{res.mesh}__{res.variant}.json"
+    return os.path.join(RESULTS_DIR, name)
+
+
+def collective_proof(multi_pod: bool = False) -> dict:
+    """H4': compile-level proof that the shard_map int8 reducer moves ~4x
+    fewer collective bytes than a plain f32 psum on the production mesh."""
+    from repro.distributed import int8_collectives as i8
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    grads = {
+        "wq": jax.ShapeDtypeStruct((4096, 4096), jnp.float32),
+        "wi": jax.ShapeDtypeStruct((4096, 11008), jnp.float32),
+        "head": jax.ShapeDtypeStruct((4096, 32000), jnp.float32),
+    }
+    out = {}
+    for mode in ("f32", "int8"):
+        reducer = i8.make_reducer(mesh, axis="data", int8=(mode == "int8"))
+        compiled = jax.jit(reducer).lower(grads).compile()
+        cost = hloparse.analyze(compiled.as_text())
+        out[mode] = dict(collective_bytes=cost.coll_total,
+                         by_op={k: v for k, v in cost.coll.items() if v})
+    out["reduction_factor"] = (out["f32"]["collective_bytes"] /
+                               max(out["int8"]["collective_bytes"], 1.0))
+    # The byte meter counts an all-reduce output once, but a ring
+    # all-reduce moves ~2x its size (reduce-scatter + all-gather); the
+    # int8 path's a2a+ag is counted at its true wire volume.  So the
+    # wire-level reduction is ~2x the metric ratio.
+    out["wire_level_factor_estimate"] = 2.0 * out["reduction_factor"]
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "int8_proof.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[proof] f32 coll bytes/chip:  {out['f32']['collective_bytes']:.3e}")
+    print(f"[proof] int8 coll bytes/chip: {out['int8']['collective_bytes']:.3e}")
+    print(f"[proof] reduction: {out['reduction_factor']:.2f}x (metric) / "
+          f"~{out['wire_level_factor_estimate']:.0f}x wire-level")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--no-kv-channels", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--act-shard", default="none", choices=["none", "seq"])
+    ap.add_argument("--fsdp-gather", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--kv-select-update", action="store_true")
+    ap.add_argument("--collective-proof", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args(argv)
+
+    if args.collective_proof:
+        collective_proof(multi_pod=args.multi_pod)
+        return 0
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        res = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       remat=args.remat,
+                       kv_channels=not args.no_kv_channels,
+                       compress_grads=args.compress_grads,
+                       act_shard=args.act_shard,
+                       fsdp_gather=args.fsdp_gather,
+                       microbatch=args.microbatch,
+                       kv_select_update=args.kv_select_update,
+                       variant=args.variant)
+        with open(result_path(res), "w") as f:
+            json.dump(res.to_json(), f, indent=2)
+        tag = res.status if res.status != "ok" else (
+            f"ok  {res.seconds:6.1f}s  flops/chip={res.flops_per_chip:.3e} "
+            f"coll={res.collectives.get('total', 0):.3e}B "
+            f"temp={res.memory.get('temp_bytes', 0)/2**30:.2f}GiB")
+        print(f"[dryrun] {arch:22s} {shape:12s} {res.mesh:8s} {tag}",
+              flush=True)
+        if res.status == "error":
+            failures += 1
+            print("         " + res.error.splitlines()[0][:160], flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state -- jax locks the device count on first use,
+and only dryrun.py is allowed to fake 512 host devices.
+
+Mesh shapes:
+  single pod:  (16, 16)    axes ("data", "model")  -- 256 chips
+  multi pod:   (2, 16, 16) axes ("pod", "data", "model") -- 512 chips
+
+``data`` (x ``pod``) carries batch/FSDP; ``model`` carries TP/EP and the
+channelized KV-sequence sharding.  The ``pod`` axis only ever appears in
+batch/FSDP shardings, so cross-pod traffic is gradient reduce-scatters and
+parameter all-gathers -- the collectives that tolerate the higher cross-pod
+latency (same trade the paper makes: bandwidth-parallel channels behind a
+latency premium).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """A mesh over whatever devices actually exist (CPU tests/examples)."""
+    n = len(jax.devices())
+    if n % model_axis:
+        model_axis = 1
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

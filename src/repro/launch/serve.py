@@ -1,0 +1,74 @@
+"""Serving launcher: batched prefill + greedy decode with a KV/state cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+
+Demonstrates the serving substrate: cache construction, batched prefill,
+the decode hot loop (the function the decode dry-run cells lower at
+production shapes), and per-phase timing including the channelized-KV
+sharding when the mesh has a model axis.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticDataset
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import smoke_variant
+from repro.models.model import Model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if not cfg.has_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    print(f"[serve] arch={cfg.name} params={model.param_count():,}")
+
+    ds = SyntheticDataset(cfg, args.batch, args.prompt_len,
+                          seed=args.seed + 1)
+    batch = ds.batch_at(0)
+    prompt = {k: v for k, v in batch.items()
+              if k not in ("targets", "loss_mask")}
+
+    cache = model.make_cache(args.batch, args.prompt_len + args.gen)
+    prefill = jax.jit(model.prefill)
+    t0 = time.time()
+    logits, cache = prefill(params, prompt, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    generate = jax.jit(model.greedy_generate, static_argnames=("steps",))
+    t0 = time.time()
+    toks, cache = generate(params, prompt, model.make_cache(
+        args.batch, args.prompt_len + args.gen), steps=args.gen)
+    toks = np.asarray(jax.block_until_ready(toks))
+    t_gen = time.time() - t0
+
+    tok_s = args.batch * args.gen / max(t_gen, 1e-9)
+    print(f"[serve] prefill {args.batch}x{args.prompt_len} tokens: "
+          f"{t_prefill*1e3:.1f} ms")
+    print(f"[serve] decode {args.gen} steps: {t_gen*1e3:.1f} ms "
+          f"({tok_s:.1f} tok/s, batch {args.batch})")
+    print(f"[serve] sample continuation (batch 0): {toks[0][:16].tolist()}")
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: config, layers, attention, MoE, SSM (Mamba2), RWKV6, stacks."""
+
+from repro.models.config import ModelConfig, smoke_variant  # noqa: F401
+from repro.models.model import Model, batch_spec, decode_batch_spec  # noqa: F401

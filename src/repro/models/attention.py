@@ -1,0 +1,172 @@
+"""Attention: GQA projections, chunked (flash-style) training attention,
+and channelized decode attention.
+
+Training/prefill attention is an online-softmax scan over KV chunks -- the
+pure-JAX flash algorithm -- so the compiled memory footprint is O(S * chunk)
+instead of O(S^2), which is what lets the 32k prefill cells compile with
+sane ``memory_analysis`` numbers.
+
+Decode attention reads one query step against a (possibly sequence-sharded)
+KV cache.  With the cache sharded over the ``model`` mesh axis by sequence
+blocks, each chip streams only its local KV bytes from HBM and XLA combines
+the partial softmax terms with small collectives -- the paper's channelized
+memory system, verbatim (DESIGN.md §3, core/planner.plan_decode_kv).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig, layered: bool = True,
+               n_layers: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    nl = cfg.n_layers if n_layers is None else n_layers
+    ls, la = ((nl,), ("layers",)) if layered else ((), ())
+    return {
+        "wq": Spec(ls + (d, nq * hd), la + ("embed", "heads")),
+        "wk": Spec(ls + (d, nkv * hd), la + ("embed", "kv_heads")),
+        "wv": Spec(ls + (d, nkv * hd), la + ("embed", "kv_heads")),
+        "wo": Spec(ls + (nq * hd, d), la + ("heads", "embed")),
+    }
+
+
+ATTN_USE_SPECS = {"wq": (None, "model"), "wk": (None, "model"),
+                  "wv": (None, "model"), "wo": ("model", None)}
+
+
+def qkv_project(cfg: ModelConfig, p: dict, x, positions):
+    """x: (B, S, D) -> q (B, S, Hq, hd), k/v (B, S, Hk, hd), roped."""
+    from repro.distributed import context
+    p = context.use_params(p, ATTN_USE_SPECS)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q, k = apply_rope(q, k, positions, hd, cfg.rope_theta,
+                      cfg.mrope_sections)
+    return q, k, v
+
+
+def _expand_kv(k, groups: int):
+    """(B, S, Hk, D) -> (B, S, Hk*groups, D) by repeating each KV head."""
+    return jnp.repeat(k, groups, axis=2)
+
+
+def reference_attention(q, k, v, causal: bool = True):
+    """O(S^2) oracle used by tests and tiny models.  (B,S,H,D) layout."""
+    groups = q.shape[2] // k.shape[2]
+    k, v = _expand_kv(k, groups), _expand_kv(v, groups)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def flash_attention(q, k, v, causal: bool = True, chunk: int = 512):
+    """Online-softmax attention, scanning KV in chunks.  (B,S,H,D) layout.
+
+    Memory: O(B * S * H * D + B * chunk * H * D) -- no S x S score tensor.
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    groups = hq // k.shape[2]
+    if sk % chunk:
+        chunk = sk  # fall back for odd sizes (smoke tests)
+    n_chunks = sk // chunk
+    scale = d ** -0.5
+
+    k = k.reshape(b, n_chunks, chunk, -1, d).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(b, n_chunks, chunk, -1, d).transpose(1, 0, 2, 3, 4)
+    q_scaled = (q * scale).astype(q.dtype)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, xs):
+        acc, m, denom, idx = carry
+        kc, vc = xs                                     # (B, c, Hk, D)
+        kc = _expand_kv(kc, groups)
+        vc = _expand_kv(vc, groups)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_scaled,
+                            kc).astype(jnp.float32)
+        if causal:
+            k_pos = idx * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] + (sk - sq) >= k_pos[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        correction = jnp.exp(m - m_new)
+        denom = denom * correction + p.sum(axis=-1)
+        acc = acc * correction[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (acc, m_new, denom, idx + 1), None
+
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((b, hq, sq), jnp.float32)
+    (acc, _, denom, _), _ = jax.lax.scan(body, (acc0, m0, d0, 0), (k, v))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B, S, H, D)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, q_start=None):
+    """Attention of new tokens against a KV cache (decode or prefill).
+
+    q: (B, Sq, Hq, D); k/v_cache: (B, S_max, Hk, D); cache_len: (B,) valid
+    lengths AFTER the new tokens were written (entries at key positions
+    >= cache_len are masked out).  ``q_start`` (scalar) is the absolute
+    position of q's first token; when given, causality *within* the new
+    block is enforced: query i attends keys at positions <= q_start + i.
+
+    The cache's S_max axis may carry a ``model``-axis sharding: XLA then
+    computes per-shard partial (max, sum, acc) and combines -- the
+    channelized-decode data path.
+    """
+    from repro.distributed import context
+    b, sq, hq, d = q.shape
+    hk = k_cache.shape[2]
+    groups = hq // hk
+    scale = d ** -0.5
+    # GQA-native grouped einsum: contract each KV head against its G query
+    # heads directly -- no materialized jnp.repeat of the cache (H8).
+    qg = (q * scale).reshape(b, sq, hk, groups, d)
+    k, v = k_cache, v_cache
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    if context.flag("kv_partials"):
+        # Pin the logits to the cache's sequence sharding so GSPMD computes
+        # shard-local partial softmax (small all-reduces of max/denom/acc)
+        # instead of all-gathering the whole KV cache (EXPERIMENTS.md §Perf
+        # H7 -- this is the flash-decode combine, the channelized read).
+        logits = context.constrain(
+            logits, ("batch", "none", "none", "none", "kv_seq"))
+    k_pos = jnp.arange(k_cache.shape[1])
+    mask = k_pos[None, :] < cache_len[:, None]              # (B, Sk)
+    mask = mask[:, None, None, None, :]                     # (B,1,1,1,Sk)
+    if q_start is not None:
+        q_pos = q_start + jnp.arange(sq)                    # (Sq,)
+        causal = k_pos[None, :] <= q_pos[:, None]           # (Sq, Sk)
+        mask = jnp.logical_and(mask, causal[None, None, None, :, :])
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    if context.flag("kv_partials"):
+        probs = context.constrain(
+            probs, ("batch", "none", "none", "none", "kv_seq"))
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = out.reshape(b, sq, hq, d)                          # (B,Sq,Hq,D)
+    if context.flag("kv_partials"):
+        out = context.constrain(out, ("batch", "none", "none", "none"))
+    return out

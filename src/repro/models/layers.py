@@ -1,0 +1,237 @@
+"""Shared building blocks: param specs, norms, positions, MLPs, embeddings.
+
+Parameters are declared as :class:`Spec` trees (shape + logical axes + init
+law); ``init_params`` materializes them deterministically (the RNG for each
+leaf is folded in from its tree path, so adding a module never reshuffles
+another module's init), and ``logical_axes`` returns the matching axes tree
+used by distributed/sharding.py to build PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Param specs.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple                  # logical axis names, len == len(shape)
+    init: str = "normal"         # normal | zeros | ones
+    scale: float = 1.0           # stddev multiplier on top of fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _leaf_key(key, path: str):
+    return jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def _materialize(spec: Spec, key, path: str, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / max(fan_in, 1) ** 0.5
+    x = jax.random.normal(_leaf_key(key, path), spec.shape, jnp.float32) * std
+    return x.astype(dtype)
+
+
+def init_params(spec_tree, key, dtype):
+    """Materialize a Spec tree into arrays (path-deterministic RNG)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec)
+    leaves = []
+    for path, spec in flat:
+        pstr = "/".join(str(p) for p in path)
+        leaves.append(_materialize(spec, key, pstr, dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def logical_axes(spec_tree):
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree,
+                                  is_leaf=is_spec)
+
+
+def shapes(spec_tree):
+    return jax.tree_util.tree_map(lambda s: s.shape, spec_tree,
+                                  is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    flat = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    total = 0
+    for s in flat:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, w, b, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32)) +
+            b.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary positions (RoPE + M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def _rotate(x, cos, sin):
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(q, k, positions, head_dim: int, theta: float,
+               mrope_sections: Optional[tuple] = None):
+    """Rotary embedding.
+
+    q: (B, S, Hq, D), k: (B, S, Hk, D).
+    positions: (B, S) int32, or (B, S, 3) for M-RoPE (t, h, w component
+    positions per token, qwen2-vl style: the frequency spectrum is split
+    into ``mrope_sections`` groups, each rotated by its own position).
+    """
+    half = head_dim // 2
+    inv = rope_freqs(head_dim, theta)                      # (half,)
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)                 # (B, S)
+        angles = pos[..., None] * inv                       # (B, S, half)
+    else:
+        assert positions.ndim == 3 and positions.shape[-1] == len(
+            mrope_sections)
+        # Static section->component index table (numpy, not traced).
+        sec = np.concatenate([np.full((n,), i, np.int32)
+                              for i, n in enumerate(mrope_sections)])
+        pos = jnp.asarray(positions).astype(jnp.float32)    # (B, S, 3)
+        pos_per_freq = jnp.take(pos, sec, axis=-1)          # (B, S, half)
+        angles = pos_per_freq * inv                         # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(q.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(q.dtype)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# MLP.
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, layered: bool = True) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lead = ((cfg.n_layers,), ("layers",)) if layered else ((), ())
+    ls, la = lead
+    if cfg.activation == "swiglu":
+        return {
+            "wi": Spec(ls + (d, f), la + ("embed", "mlp")),
+            "wg": Spec(ls + (d, f), la + ("embed", "mlp")),
+            "wo": Spec(ls + (f, d), la + ("mlp", "embed")),
+        }
+    return {
+        "wi": Spec(ls + (d, f), la + ("embed", "mlp")),
+        "wo": Spec(ls + (f, d), la + ("mlp", "embed")),
+    }
+
+
+MLP_USE_SPECS = {"wi": (None, "model"), "wg": (None, "model"),
+                 "wo": ("model", None)}
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x):
+    from repro.distributed import context
+    p = context.use_params(p, MLP_USE_SPECS)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:
+        raise ValueError(cfg.activation)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with sequence-chunked cross-entropy.
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    out = {"tokens": Spec((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        out["head"] = Spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return out
+
+
+def embed_apply(cfg: ModelConfig, p: dict, token_ids):
+    return jnp.take(p["tokens"], token_ids, axis=0)
+
+
+def unembed_matrix(cfg: ModelConfig, p: dict):
+    if cfg.tie_embeddings:
+        return p["tokens"].T
+    return p["head"]
+
+
+def chunked_ce_loss(h, w_head, targets, mask, chunk: int = 1024):
+    """Next-token CE over (B, S, D) hidden states, seq-chunked.
+
+    Avoids materializing the full (B, S, V) logits: lax.map over sequence
+    chunks keeps live logits at (B, chunk, V).  Loss is averaged over
+    ``mask`` (0/1) positions in float32.
+    """
+    b, s, d = h.shape
+    n = max(s // chunk, 1)
+    chunk = s // n
+    h_c = h.reshape(b, n, chunk, d).swapaxes(0, 1)           # (n, B, c, D)
+    t_c = targets.reshape(b, n, chunk).swapaxes(0, 1)
+    m_c = mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def one(args):
+        hc, tc, mc = args
+        logits = (hc @ w_head).astype(jnp.float32)           # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mc
+        return nll.sum(), mc.sum()
+
+    nll, cnt = jax.lax.map(one, (h_c, t_c, m_c))
+    return nll.sum() / jnp.maximum(cnt.sum(), 1.0)

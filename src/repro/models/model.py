@@ -1,0 +1,135 @@
+"""Public model API: init / loss / prefill / decode_step per architecture.
+
+The same four entry points cover all ten assigned architectures; the launch
+layer (train.py / serve.py / dryrun.py) only ever talks to this interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.config import ModelConfig
+from repro.models.transformer import FRONTEND_DIM, forward, init_cache
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def specs(self):
+        return transformer.model_specs(self.cfg)
+
+    def init(self, key):
+        return layers.init_params(self.specs(), key, DTYPES[self.cfg.dtype])
+
+    def logical_axes(self):
+        return layers.logical_axes(self.specs())
+
+    def param_count(self) -> int:
+        return layers.param_count(self.specs())
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch):
+        """Mean next-token (or masked-prediction) CE -> (loss, metrics)."""
+        from repro.distributed import context
+        cfg = self.cfg
+        h, _ = forward(cfg, params, batch, training=True)
+        w_head = layers.unembed_matrix(cfg, params["embed"])
+        w_head = context.use_params({"w": w_head},
+                                    {"w": (None, "model")})["w"]
+        loss = layers.chunked_ce_loss(h, w_head, batch["targets"],
+                                      batch["loss_mask"].astype(jnp.float32))
+        metrics = {"loss": loss}
+        return loss, metrics
+
+    # -- serving ------------------------------------------------------------
+    def make_cache(self, batch_size: int, max_len: int):
+        dtype = DTYPES[self.cfg.dtype]
+        return init_cache(self.cfg, batch_size, max_len, dtype)
+
+    def prefill(self, params, batch, cache):
+        """Run a prompt through the model, filling ``cache``.
+
+        Returns (last-position logits (B, V), cache)."""
+        h, cache = forward(self.cfg, params, batch, cache=cache)
+        w_head = layers.unembed_matrix(self.cfg, params["embed"])
+        logits = (h[:, -1, :] @ w_head).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, step_batch, cache):
+        """One-token decode: step_batch holds (B, 1) tokens + positions.
+
+        Returns (logits (B, V), new cache).  This is the function the
+        ``decode_*`` and ``long_*`` dry-run shapes lower.
+        """
+        h, cache = forward(self.cfg, params, step_batch, cache=cache)
+        w_head = layers.unembed_matrix(self.cfg, params["embed"])
+        logits = (h[:, -1, :] @ w_head).astype(jnp.float32)
+        return logits, cache
+
+    def greedy_generate(self, params, batch, cache, steps: int):
+        """Greedy decoding loop (lax.scan over steps) for examples/tests."""
+        cfg = self.cfg
+        logits, cache = self.prefill(params, batch, cache)
+        tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def step(carry, _):
+            tok, cache = carry
+            pos = jnp.broadcast_to(cache["len"][None, None],
+                                   (tok.shape[0], 1)).astype(jnp.int32)
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(pos[..., None],
+                                       pos.shape + (3,)).astype(jnp.int32)
+            sb = dict(tokens=tok[:, None], positions=pos)
+            logits, cache = self.decode_step(params, sb, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        (_, cache), toks = jax.lax.scan(step, (tok0, cache), None,
+                                        length=steps)
+        return jnp.moveaxis(toks, 0, 1), cache   # (B, steps)
+
+
+# ---------------------------------------------------------------------------
+# Batch construction helpers (shared by data pipeline and input_specs).
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs for one training batch of this architecture."""
+    i32 = jnp.int32
+    specs = {}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, seq, FRONTEND_DIM), DTYPES[cfg.dtype])
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if cfg.mrope_sections:
+        specs["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), i32)
+    else:
+        specs["positions"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, FRONTEND_DIM), DTYPES[cfg.dtype])
+        specs["vision_mask"] = jax.ShapeDtypeStruct((batch, seq), jnp.bool_)
+    specs["targets"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    specs["loss_mask"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    return specs
+
+
+def decode_batch_spec(cfg: ModelConfig, batch: int) -> dict:
+    """ShapeDtypeStructs for a one-token decode step."""
+    i32 = jnp.int32
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+    if cfg.mrope_sections:
+        specs["positions"] = jax.ShapeDtypeStruct((batch, 1, 3), i32)
+    else:
+        specs["positions"] = jax.ShapeDtypeStruct((batch, 1), i32)
+    return specs

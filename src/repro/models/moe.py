@@ -1,0 +1,95 @@
+"""Top-k routed mixture-of-experts with capacity-based einsum dispatch.
+
+Expert-parallel friendly: the (E, C, D) dispatch buffers and the (E, D, F)
+expert weights carry an ``experts`` logical axis that the sharding rules map
+to the ``model`` mesh axis, so the grouped matmuls run as EP and XLA inserts
+the token all-to-alls.  Routing uses deterministic position-in-expert ranks
+(cumsum over the flattened token-slot order), the standard
+Switch/GShard-style capacity discipline: overflow tokens fall back to the
+residual path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec
+
+
+def moe_specs(cfg: ModelConfig, layered: bool = True) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ls, la = ((cfg.n_layers,), ("layers",)) if layered else ((), ())
+    specs = {
+        "router": Spec(ls + (d, e), la + ("embed", "experts_router")),
+        "wi": Spec(ls + (e, d, f), la + ("experts", "embed", "mlp")),
+        "wo": Spec(ls + (e, f, d), la + ("experts", "mlp", "embed")),
+    }
+    if cfg.activation == "swiglu":
+        specs["wg"] = Spec(ls + (e, d, f), la + ("experts", "embed", "mlp"))
+    return specs
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(cap, cfg.top_k)
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x, return_aux: bool = False):
+    """x: (B, S, D) -> (B, S, D) [+ aux losses dict]."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+
+    from repro.distributed import context
+    p = context.use_params(p, {"router": (None, None),
+                               "wi": ("model", None, None),
+                               "wg": ("model", None, None),
+                               "wo": ("model", None, None)})
+    gate_logits = (xf @ p["router"]).astype(jnp.float32)     # (T, E)
+    gates = jax.nn.softmax(gate_logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)                     # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    cap = capacity(cfg, t)
+    # Rank each (token, slot) within its expert, in flat priority order.
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)        # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    ranks = jnp.cumsum(flat, axis=0) - flat                  # exclusive
+    rank_of = (ranks * flat).sum(-1).reshape(t, k)           # (T, k)
+    keep = (rank_of < cap)
+    slot = jnp.minimum(rank_of, cap - 1)
+
+    eid = topi.reshape(-1)                                   # (T*k,)
+    sid = slot.reshape(-1)
+    w_disp = (topw * keep).astype(x.dtype).reshape(-1)       # (T*k,)
+
+    # Dispatch: scatter token vectors into per-expert capacity buffers.
+    upd = jnp.repeat(xf, k, axis=0) * (w_disp != 0)[:, None]
+    buf = jnp.zeros((e, cap, d), x.dtype).at[eid, sid].add(upd)
+
+    # Expert computation (grouped matmuls; EP-shardable on the E axis).
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["wi"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])         # (E, C, D)
+
+    # Combine: gather each slot back and weight by the router.
+    gathered = out_buf[eid, sid]                             # (T*k, D)
+    y = (gathered * w_disp[:, None]).reshape(t, k, d).sum(axis=1)
+    y = y.reshape(b, s, d)
+
+    if not return_aux:
+        return y
+    # Switch-style load-balance loss + router z-loss.
+    density = jnp.mean(jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32),
+                       axis=0)
+    router_prob = jnp.mean(gates, axis=0)
+    lb_loss = e * jnp.sum(density * router_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(gate_logits, axis=-1)))
+    return y, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+               "moe_overflow": 1.0 - jnp.mean(keep.astype(jnp.float32))}

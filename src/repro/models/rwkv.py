@@ -1,0 +1,143 @@
+"""RWKV6 ("Finch") blocks: data-dependent-decay linear attention.
+
+Time-mix: token-shift interpolation with data-dependent mixing (low-rank
+ddlerp), per-channel data-dependent decay w_t = exp(-exp(...)), and the WKV
+matrix-state recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+carried as an (H, hd, hd) fp32 state per head -- O(1) in context length,
+which is why rwkv6 is assigned the 500k decode shape.  Training runs the
+same recurrence as a jax.lax.scan over time (the Pallas kernel in
+kernels/rwkv_wkv.py is the chunked TPU-optimized path; this module is the
+semantic definition).
+
+Channel-mix: token-shift + squared-ReLU MLP with a sigmoid receptance gate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec
+
+
+def rwkv_specs(cfg: ModelConfig, layered: bool = True) -> dict:
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.rwkv_lora_rank
+    h = cfg.rwkv_heads
+    ls, la = ((cfg.n_layers,), ("layers",)) if layered else ((), ())
+    return {
+        # time-mix
+        "mix_base": Spec(ls + (5, d), la + ("mix", "embed"), init="zeros"),
+        "mix_w1": Spec(ls + (d, 5 * r), la + ("embed", "rank")),
+        "mix_w2": Spec(ls + (5, r, d), la + ("mix", "rank", "embed")),
+        "wr": Spec(ls + (d, d), la + ("embed", "heads")),
+        "wk": Spec(ls + (d, d), la + ("embed", "heads")),
+        "wv": Spec(ls + (d, d), la + ("embed", "heads")),
+        "wg": Spec(ls + (d, d), la + ("embed", "heads")),
+        "decay_base": Spec(ls + (d,), la + ("embed",), init="zeros"),
+        "decay_w1": Spec(ls + (d, r), la + ("embed", "rank")),
+        "decay_w2": Spec(ls + (r, d), la + ("rank", "embed")),
+        "bonus_u": Spec(ls + (d,), la + ("embed",), init="zeros"),
+        "ln_x": Spec(ls + (d,), la + ("embed",), init="zeros"),
+        "wo": Spec(ls + (d, d), la + ("heads", "embed")),
+        # channel-mix
+        "cm_mix": Spec(ls + (2, d), la + ("mix", "embed"), init="zeros"),
+        "cm_wk": Spec(ls + (d, f), la + ("embed", "mlp")),
+        "cm_wr": Spec(ls + (d, d), la + ("embed", "heads")),
+        "cm_wv": Spec(ls + (f, d), la + ("mlp", "embed")),
+    }
+
+
+def _token_shift(x, prev):
+    """Shift right by one: position t sees x_{t-1}; ``prev`` seeds t=0."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """WKV recurrence over time.
+
+    r/k/v: (B, S, H, hd); w: (B, S, H, hd) decays in (0,1);
+    u: (H, hd) bonus; state: (B, H, hd, hd) fp32 (key x value layout).
+    Returns y (B, S, H, hd), new_state.
+    """
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                     # (B,H,hd) each
+        a_t = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * a_t)
+        s = s * wt[..., None] + a_t
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state       # (B,S,H,hd)
+
+
+def time_mix(cfg: ModelConfig, p: dict, x, shift_state, wkv_state):
+    """x: (B, S, D) -> (y, (new_shift, new_wkv))."""
+    from repro.distributed import context
+    p = context.use_params(p, {"wr": (None, "model"), "wk": (None, "model"),
+                               "wv": (None, "model"), "wg": (None, "model"),
+                               "wo": ("model", None)})
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    xx = _token_shift(x, shift_state)
+    delta = xx - x
+
+    # Data-dependent lerp (ddlerp): one shared low-rank tower -> 5 mixes.
+    lora = jnp.tanh(x @ p["mix_w1"]).reshape(b, s, 5, -1)
+    mixes = p["mix_base"][None, None] + jnp.einsum(
+        "bsmr,mrd->bsmd", lora, p["mix_w2"])    # (B,S,5,D)
+    xr, xk, xv, xw, xg = (x + delta * jax.nn.sigmoid(mixes[:, :, i])
+                          for i in range(5))
+
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+
+    # Data-dependent per-channel decay in (0, 1).
+    dd = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32) - 3.0))     # near 1.0 init
+    w = w.reshape(b, s, h, hd)
+    u = p["bonus_u"].reshape(h, hd).astype(jnp.float32)
+
+    y, new_state = _wkv_scan(r, k, v, w, u, wkv_state)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    # Group norm over heads (ln_x) then output gate + projection.
+    yh = y.reshape(b, s, h, hd).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yh), axis=-1, keepdims=True)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var - jnp.square(mu) + cfg.norm_eps)
+    y = (yh.reshape(b, s, d) *
+         (1.0 + p["ln_x"].astype(jnp.float32))).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, (x[:, -1, :], new_state)
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x, shift_state):
+    from repro.distributed import context
+    p = context.use_params(p, {"cm_wk": (None, "model"),
+                               "cm_wr": (None, "model"),
+                               "cm_wv": ("model", None)})
+    xx = _token_shift(x, shift_state)
+    delta = xx - x
+    xk = x + delta * jax.nn.sigmoid(p["cm_mix"][0])[None, None]
+    xr = x + delta * jax.nn.sigmoid(p["cm_mix"][1])[None, None]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    rr = jax.nn.sigmoid(xr @ p["cm_wr"])
+    return rr * (kk @ p["cm_wv"]), x[:, -1, :]
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """(tm_shift, wkv_state, cm_shift) zeros for decode/stream."""
+    d, h, hd = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_dim
+    return (jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, d), dtype))

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) blocks: chunked training scan + O(1)-state decode step.
+
+The SSD computation follows the Mamba2 chunked algorithm: within a chunk of
+Q tokens the output is a masked (C_i . B_j) kernel against the inputs; across
+chunks a (H, N, P) state is carried by an exponential-decay recurrence
+(jax.lax.scan).  Decode is the plain recurrent update -- state size is
+H x N x P per layer, independent of context length, which is why the hybrid
+and SSM architectures are the ones assigned the 500k-token decode shape.
+
+Layout conventions: x (B, S, D); inner activations (B, S, H, P) with
+H = d_inner / P heads; B/C projections are shared across heads (one group).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec
+
+#: Chunk length for the SSD scan.
+SSD_CHUNK = 64
+
+
+def ssm_specs(cfg: ModelConfig, layered: bool = True,
+              n_layers: int | None = None) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    cw = cfg.ssm_conv
+    nl = cfg.n_layers if n_layers is None else n_layers
+    ls, la = ((nl,), ("layers",)) if layered else ((), ())
+    return {
+        # x -> [z (di), x_ssm (di), B (n), C (n), dt (h)]
+        "in_proj": Spec(ls + (d, 2 * di + 2 * n + h), la + ("embed", "ssm_inner")),
+        "conv_w": Spec(ls + (cw, di + 2 * n), la + ("conv", "ssm_inner"),
+                       init="normal", scale=1.0),
+        "conv_b": Spec(ls + (di + 2 * n,), la + ("ssm_inner",), init="zeros"),
+        "a_log": Spec(ls + (h,), la + ("heads",), init="zeros"),
+        "dt_bias": Spec(ls + (h,), la + ("heads",), init="zeros"),
+        "d_skip": Spec(ls + (h,), la + ("heads",), init="zeros"),
+        "out_proj": Spec(ls + (di, d), la + ("ssm_inner", "embed")),
+        "gate_norm": Spec(ls + (di,), la + ("ssm_inner",), init="zeros"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xc = proj[..., di:2 * di]
+    b = proj[..., 2 * di:2 * di + n]
+    c = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xc, b, c, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over (B, S, C) with window len(w)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    return out + b
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, init_state=None):
+    """Chunked SSD.
+
+    xh:   (B, S, H, P) inputs
+    dt:   (B, S, H)    softplus'd step sizes
+    a:    (H,)         negative decay rates (a < 0)
+    bmat: (B, S, N)    input->state projection (shared across heads)
+    cmat: (B, S, N)    state->output projection
+    init_state: optional (B, H, N, P) carried state (prefill continuation)
+    returns y (B, S, H, P), final_state (B, H, N, P)
+    """
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = SSD_CHUNK if s % SSD_CHUNK == 0 else s
+    nc = s // q
+
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(bsz, nc, q, h, p)
+    dt = dt.astype(f32).reshape(bsz, nc, q, h)
+    bm = bmat.astype(f32).reshape(bsz, nc, q, n)
+    cm = cmat.astype(f32).reshape(bsz, nc, q, n)
+
+    da = dt * a[None, None, None, :]                   # (B,nc,Q,H), <= 0
+    seg = jnp.cumsum(da, axis=2)                       # within-chunk cumsum
+    total = seg[:, :, -1, :]                           # (B,nc,H)
+
+    # Within-chunk (diagonal) term.
+    cb = jnp.einsum("bcin,bcjn->bcij", cm, bm)          # (B,nc,Q,Q)
+    decay = jnp.exp(seg[:, :, :, None, :] - seg[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    kern = cb[..., None] * decay * dt[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", kern, xh)
+
+    # Chunk-boundary states: contribution of chunk c to the carried state.
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)     # (B,nc,Q,H)
+    state_in = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                          bm, dt * decay_to_end, xh)       # (B,nc,H,N,P)
+
+    def scan_fn(state, inputs):
+        st_in, tot = inputs                                # (B,H,N,P),(B,H)
+        new = state * jnp.exp(tot)[..., None, None] + st_in
+        return new, state                                  # emit state *before*
+
+    init = (jnp.zeros((bsz, h, n, p), f32) if init_state is None
+            else init_state.astype(f32))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (state_in.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,N,P)
+
+    # Off-diagonal term: prior state read out through C with decay.
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                       cm, jnp.exp(seg), prev_states)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def mamba_apply(cfg: ModelConfig, p: dict, x, state=None, conv_state=None):
+    """Mamba2 block.
+
+    Training/prefill: x (B, S, D), state=None -> (y, (state, conv_state)).
+    Decode: x (B, 1, D) with carried (state, conv_state).
+    """
+    bsz, s, _ = x.shape
+    from repro.distributed import context
+    p = context.use_params(p, {"in_proj": (None, None),
+                               "out_proj": (None, None)})
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xc, bmat, cmat, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)   # (B,S,di+2n)
+    if state is None:
+        conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv_state = conv_in[:, -(cfg.ssm_conv - 1):, :]
+    else:
+        window = jnp.concatenate([conv_state, conv_in], axis=1)
+        conv = _causal_conv(window, p["conv_w"], p["conv_b"])[:, -s:, :]
+        new_conv_state = window[:, -(cfg.ssm_conv - 1):, :]
+    conv = jax.nn.silu(conv)
+    xc, bmat, cmat = (conv[..., :di], conv[..., di:di + n],
+                      conv[..., di + n:])
+
+    xh = xc.reshape(bsz, s, h, pdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (H,) < 0
+
+    if state is None:
+        y, new_state = _ssd_chunked(xh, dt, a, bmat, cmat)
+    elif s > 1:
+        # Prefill continuation: chunked path seeded with the carried state.
+        y, new_state = _ssd_chunked(xh, dt, a, bmat, cmat, init_state=state)
+    else:
+        # Recurrent decode step (s == 1).
+        da = jnp.exp(dt[:, 0] * a[None, :])                # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bmat[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        new_state = state * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32),
+                       new_state)[:, None]                 # (B,1,H,P)
+        new_conv_state = new_conv_state
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    # Gated RMS norm (Mamba2's norm-before-out-proj).
+    gated = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(gated.astype(jnp.float32)), -1, keepdims=True)
+    gated = (gated.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps) *
+             (1.0 + p["gate_norm"].astype(jnp.float32))).astype(x.dtype)
+    out = gated @ p["out_proj"]
+    return out, (new_state, new_conv_state)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """(state, conv_state) zeros for decode."""
+    state = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32)
+    conv_state = jnp.zeros(
+        (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype)
+    return state, conv_state

@@ -1,0 +1,402 @@
+"""Stack assembly for all six families: scan-over-layers + remat + caches.
+
+One compiled layer body per homogeneous group (jax.lax.scan over stacked
+parameters) keeps compile time flat in depth -- an 88-layer mistral-large
+train step compiles the same HLO as a 2-layer one, just with a bigger scan.
+
+Families:
+  dense / vlm -- pre-RMSNorm GQA + SwiGLU, causal
+  moe         -- pre-RMSNorm GQA + routed experts
+  audio       -- encoder-only pre-LayerNorm GQA + GELU (bidirectional)
+  hybrid      -- Mamba2 groups with one *shared* attention block applied
+                 after every ``attn_every`` Mamba layers (zamba2): nested
+                 scan -- outer over groups, inner over Mamba layers
+  ssm         -- RWKV6 time-mix + channel-mix
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context
+from repro.models import attention, layers, moe, rwkv, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import Spec
+
+#: Stub modality-frontend feature width (audio frames / vision patches).
+FRONTEND_DIM = 512
+
+
+# ---------------------------------------------------------------------------
+# Spec assembly.
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs: dict = {
+        "embed": layers.embed_specs(cfg),
+        "final_norm": Spec((d,), ("embed",), init="zeros"),
+    }
+    if cfg.embed_inputs or cfg.family == "vlm":
+        specs["frontend"] = {
+            "proj": Spec((FRONTEND_DIM, d), ("frontend", "embed"))}
+
+    if cfg.family in ("dense", "vlm"):
+        specs["layers"] = {
+            "ln1": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "ln2": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "attn": attention.attn_specs(cfg),
+            "mlp": layers.mlp_specs(cfg),
+        }
+    elif cfg.family == "moe":
+        specs["layers"] = {
+            "ln1": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "ln2": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "attn": attention.attn_specs(cfg),
+            "moe": moe.moe_specs(cfg),
+        }
+    elif cfg.family == "audio":
+        specs["layers"] = {
+            "ln1_w": Spec((cfg.n_layers, d), ("layers", "embed"),
+                          init="zeros"),
+            "ln1_b": Spec((cfg.n_layers, d), ("layers", "embed"),
+                          init="zeros"),
+            "ln2_w": Spec((cfg.n_layers, d), ("layers", "embed"),
+                          init="zeros"),
+            "ln2_b": Spec((cfg.n_layers, d), ("layers", "embed"),
+                          init="zeros"),
+            "attn": attention.attn_specs(cfg),
+            "mlp": layers.mlp_specs(cfg),
+        }
+    elif cfg.family == "hybrid":
+        if cfg.n_layers % cfg.attn_every:
+            raise ValueError("hybrid: n_layers must divide by attn_every")
+        specs["layers"] = {
+            "ln1": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "mamba": ssm.ssm_specs(cfg),
+        }
+        specs["shared_attn"] = {
+            "ln1": Spec((d,), ("embed",), init="zeros"),
+            "ln2": Spec((d,), ("embed",), init="zeros"),
+            "attn": attention.attn_specs(cfg, layered=False),
+            "mlp": layers.mlp_specs(cfg, layered=False),
+        }
+    elif cfg.family == "ssm":
+        specs["layers"] = {
+            "ln1": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "ln2": Spec((cfg.n_layers, d), ("layers", "embed"), init="zeros"),
+            "rwkv": rwkv.rwkv_specs(cfg),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Remat policy.
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg: ModelConfig, fn, training: bool):
+    if not training or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, pl, x, positions, causal, kv_cache):
+    """Returns (y, new_kv_cache); kv_cache None during training/prefill-less
+    runs, else {'k','v'} (B, S_max, Hk, hd) plus scalar 'len' handled by the
+    caller."""
+    if kv_cache is None:
+        q, k, v = attention.qkv_project(cfg, pl["attn"], x, positions)
+        if x.shape[1] <= 256:
+            o = attention.reference_attention(q, k, v, causal=causal)
+        else:
+            o = attention.flash_attention(q, k, v, causal=causal)
+        new_cache = None
+    else:
+        k_cache, v_cache, cache_len = kv_cache
+        q, k, v = attention.qkv_project(cfg, pl["attn"], x, positions)
+        if x.shape[1] == 1 and context.flag("kv_select_update"):
+            # Sequence-sharded caches + a traced write index make GSPMD
+            # fully rematerialize (replicate!) the cache around a
+            # dynamic-update-slice.  A positional select is elementwise and
+            # therefore shard-local -- no resharding, no replication
+            # (EXPERIMENTS.md §Perf H6).
+            pos = jnp.arange(k_cache.shape[1])[None, :, None, None]
+            at = pos == cache_len
+            k_cache = jnp.where(at, k.astype(k_cache.dtype), k_cache)
+            v_cache = jnp.where(at, v.astype(v_cache.dtype), v_cache)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+        lens = jnp.full((x.shape[0],), cache_len + x.shape[1], jnp.int32)
+        o = attention.decode_attention(q, k_cache, v_cache, lens,
+                                       q_start=cache_len)
+        new_cache = (k_cache, v_cache)
+    b, s, _, _ = o.shape
+    wo = context.use_params(pl["attn"], attention.ATTN_USE_SPECS)["wo"]
+    y = o.reshape(b, s, -1) @ wo
+    return y, new_cache
+
+
+def _dense_body(cfg, x, pl, positions, causal, kv_cache):
+    h = layers.rms_norm(x, pl["ln1"], cfg.norm_eps)
+    a, new_kv = _attn_block(cfg, pl, h, positions, causal, kv_cache)
+    x = x + a
+    h = layers.rms_norm(x, pl["ln2"], cfg.norm_eps)
+    x = x + layers.mlp_apply(cfg, pl["mlp"], h)
+    return x, new_kv
+
+
+def _moe_body(cfg, x, pl, positions, causal, kv_cache):
+    h = layers.rms_norm(x, pl["ln1"], cfg.norm_eps)
+    a, new_kv = _attn_block(cfg, pl, h, positions, causal, kv_cache)
+    x = x + a
+    h = layers.rms_norm(x, pl["ln2"], cfg.norm_eps)
+    x = x + moe.moe_apply(cfg, pl["moe"], h)
+    return x, new_kv
+
+
+def _audio_body(cfg, x, pl, positions, causal, kv_cache):
+    h = layers.layer_norm(x, pl["ln1_w"], pl["ln1_b"], cfg.norm_eps)
+    a, _ = _attn_block(cfg, pl, h, positions, causal=False, kv_cache=None)
+    x = x + a
+    h = layers.layer_norm(x, pl["ln2_w"], pl["ln2_b"], cfg.norm_eps)
+    x = x + layers.mlp_apply(cfg, pl["mlp"], h)
+    return x, None
+
+
+def _rwkv_body(cfg, x, pl, cache):
+    tm_shift, wkv_state, cm_shift = cache
+    h = layers.rms_norm(x, pl["ln1"], cfg.norm_eps)
+    y, (new_tm, new_wkv) = rwkv.time_mix(cfg, pl["rwkv"], h, tm_shift,
+                                         wkv_state)
+    x = x + y
+    h = layers.rms_norm(x, pl["ln2"], cfg.norm_eps)
+    y, new_cm = rwkv.channel_mix(cfg, pl["rwkv"], h, cm_shift)
+    x = x + y
+    return x, (new_tm, new_wkv, new_cm)
+
+
+def _mamba_body(cfg, x, pl, cache):
+    state, conv = cache if cache is not None else (None, None)
+    h = layers.rms_norm(x, pl["ln1"], cfg.norm_eps)
+    y, (new_state, new_conv) = ssm.mamba_apply(cfg, pl["mamba"], h, state,
+                                               conv)
+    return x + y, (new_state, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# Stacks.
+# ---------------------------------------------------------------------------
+
+def _scan_uniform(cfg, body, params_layers, x, training):
+    """scan over stacked per-layer params; no cache (training path)."""
+    fn = _maybe_remat(cfg, lambda xx, pl: body(xx, pl), training)
+
+    def step(xx, pl):
+        xx = context.constrain(xx, ("batch", "seq", "embed"))
+        return fn(xx, pl), None
+
+    x = context.constrain(x, ("batch", "seq", "embed"))
+    x, _ = jax.lax.scan(step, x, params_layers)
+    return x
+
+
+def _scan_with_cache(body, params_layers, x, cache):
+    """scan carrying x, with per-layer cache slices as scan inputs/outputs."""
+
+    def step(xx, inp):
+        pl, cl = inp
+        xx, new_cl = body(xx, pl, cl)
+        return xx, new_cl
+
+    x, new_cache = jax.lax.scan(step, x, (params_layers, cache))
+    return x, new_cache
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    if cfg.family == "audio":
+        return batch["frames"] @ params["frontend"]["proj"]
+    x = layers.embed_apply(cfg, params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        proj = batch["vision_embeds"] @ params["frontend"]["proj"]
+        x = jnp.where(batch["vision_mask"][..., None], proj, x)
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, *, training: bool = False,
+            cache: Optional[dict] = None):
+    """Full forward pass -> (hidden (B,S,D), new_cache_or_None).
+
+    ``batch`` keys: tokens (B,S) int32 [or frames (B,S,FRONTEND_DIM)],
+    positions (B,S) [or (B,S,3) for M-RoPE].  When ``cache`` is given the
+    pass is an incremental decode/prefill continuation.
+    """
+    x = _embed_inputs(cfg, params, batch)
+    positions = batch["positions"]
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe", "audio"):
+        body = {"dense": _dense_body, "vlm": _dense_body,
+                "moe": _moe_body, "audio": _audio_body}[fam]
+        if cache is None:
+            x = _scan_uniform(
+                cfg, lambda xx, pl: body(cfg, xx, pl, positions,
+                                         not cfg.encoder_only, None)[0],
+                params["layers"], x, training)
+            new_cache = None
+        else:
+            cache_len = cache["len"]
+
+            def cbody(xx, pl, cl):
+                xx, new_kv = body(cfg, xx, pl, positions,
+                                  not cfg.encoder_only,
+                                  (cl[0], cl[1], cache_len))
+                return xx, new_kv
+
+            x, (k_new, v_new) = _scan_with_cache(
+                cbody, params["layers"], x, (cache["k"], cache["v"]))
+            new_cache = dict(k=k_new, v=v_new,
+                             len=cache_len + x.shape[1])
+    elif fam == "ssm":
+        if cache is None:
+            b = x.shape[0]
+            zero = jax.tree_util.tree_map(
+                lambda l: l, _rwkv_zero_cache(cfg, b, x.dtype))
+            fn = _maybe_remat(
+                cfg, lambda xx, inp: _rwkv_body(cfg, xx, inp[0], inp[1]),
+                training)
+
+            def step(xx, pl):
+                xx, _ = fn(xx, (pl, zero))
+                return xx, None
+
+            x, _ = jax.lax.scan(step, x, params["layers"])
+            new_cache = None
+        else:
+            x, new_c = _scan_with_cache(
+                lambda xx, pl, cl: _rwkv_body(cfg, xx, pl, cl),
+                params["layers"], x,
+                (cache["tm_shift"], cache["wkv"], cache["cm_shift"]))
+            new_cache = dict(tm_shift=new_c[0], wkv=new_c[1],
+                             cm_shift=new_c[2], len=cache["len"] + x.shape[1])
+    elif fam == "hybrid":
+        x, new_cache = _hybrid_stack(cfg, params, x, positions, cache,
+                                     training)
+    else:
+        raise ValueError(fam)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def _rwkv_zero_cache(cfg, batch, dtype):
+    return rwkv.init_rwkv_cache(cfg, batch, dtype)
+
+
+def _hybrid_stack(cfg: ModelConfig, params, x, positions, cache, training):
+    """Zamba2-style: groups of Mamba layers + one shared attention block.
+
+    Outer scan over groups (the shared block's weights are closed over, so
+    every group applies the *same* attention parameters); inner scan over
+    the group's Mamba layers.
+    """
+    groups = cfg.n_layers // cfg.attn_every
+    per = cfg.attn_every
+    # Reshape stacked (L, ...) params to (groups, per, ...).
+    glayers = jax.tree_util.tree_map(
+        lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+    shared = params["shared_attn"]
+
+    def shared_block(xx, kv):
+        h = layers.rms_norm(xx, shared["ln1"], cfg.norm_eps)
+        a, new_kv = _attn_block(cfg, shared, h, positions, True, kv)
+        xx = xx + a
+        h = layers.rms_norm(xx, shared["ln2"], cfg.norm_eps)
+        return xx + layers.mlp_apply(cfg, shared["mlp"], h), new_kv
+
+    if cache is None:
+        mamba_fn = _maybe_remat(
+            cfg, lambda xx, pl: _mamba_body(cfg, xx, pl, None)[0], training)
+        shared_fn = _maybe_remat(
+            cfg, lambda xx: shared_block(xx, None)[0], training)
+
+        def group_step(xx, gp):
+            def inner(x2, pl):
+                x2 = context.constrain(x2, ("batch", "seq", "embed"))
+                return mamba_fn(x2, pl), None
+            xx, _ = jax.lax.scan(inner, xx, gp)
+            return shared_fn(xx), None
+
+        x, _ = jax.lax.scan(group_step, x, glayers)
+        return x, None
+
+    cache_len = cache["len"]
+    regroup = lambda a: a.reshape((groups, per) + a.shape[1:])
+
+    def group_step(xx, inp):
+        gp, (sst, cst, kc, vc) = inp
+
+        def inner(x2, pinner):
+            pl, st, cv = pinner
+            x2, (nst, ncv) = _mamba_body(cfg, x2, pl, (st, cv))
+            return x2, (nst, ncv)
+
+        xx, (nst, ncv) = jax.lax.scan(inner, xx, (gp, sst, cst))
+        xx, new_kv = shared_block(xx, (kc, vc, cache_len))
+        return xx, (nst, ncv, new_kv[0], new_kv[1])
+
+    x, (nst, ncv, nk, nv) = jax.lax.scan(
+        group_step, x,
+        (glayers, (regroup(cache["ssm_state"]), regroup(cache["conv"]),
+                   cache["k"], cache["v"])))
+    new_cache = dict(
+        ssm_state=nst.reshape((-1,) + nst.shape[2:]),
+        conv=ncv.reshape((-1,) + ncv.shape[2:]),
+        k=nk, v=nv, len=cache_len + x.shape[1])
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Zeroed decode cache sized for ``max_len`` tokens of context."""
+    hd = cfg.resolved_head_dim
+    if cfg.family in ("dense", "vlm", "moe"):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+        return dict(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                    len=jnp.zeros((), jnp.int32))
+    if cfg.family == "ssm":
+        st = rwkv.init_rwkv_cache(cfg, batch, dtype)
+        stack = lambda a: jnp.broadcast_to(
+            a[None], (cfg.n_layers,) + a.shape).copy()
+        return dict(tm_shift=stack(st[0]), wkv=stack(st[1]),
+                    cm_shift=stack(st[2]), len=jnp.zeros((), jnp.int32))
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        state, conv = ssm.init_ssm_cache(cfg, batch, dtype)
+        kv_shape = (groups, batch, max_len, cfg.n_kv_heads, hd)
+        return dict(
+            ssm_state=jnp.zeros((cfg.n_layers,) + state.shape,
+                                jnp.float32),
+            conv=jnp.zeros((cfg.n_layers,) + conv.shape, dtype),
+            k=jnp.zeros(kv_shape, dtype), v=jnp.zeros(kv_shape, dtype),
+            len=jnp.zeros((), jnp.int32))
+    raise ValueError(f"{cfg.family} has no decode cache")

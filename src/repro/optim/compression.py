@@ -1,0 +1,59 @@
+"""Int8 error-feedback gradient compression for DP all-reduce.
+
+The COAXIAL-asym idea (§4.3: provision scarce interconnect bandwidth
+according to traffic demand) applied to the training write path: gradients
+are the dominant "write" traffic of a data-parallel step.  Compressing them
+to int8 with per-tensor scales cuts reduce-scatter bytes 4x (bf16->int8 is
+2x, fp32->int8 is 4x); the quantization error is carried in an error-
+feedback buffer and re-injected next step, which keeps SGD convergence
+(Seide et al. / EF-SGD).
+
+Usage: wrap the grads between value_and_grad and the optimizer:
+
+    comp, ef = compress(grads, ef)        # quantize + error feedback
+    grads = decompress(comp)              # after the (cheaper) all-reduce
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_one(g, ef):
+    g = g.astype(jnp.float32) + ef
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    err = g - q.astype(jnp.float32) * scale
+    return (q, scale), err
+
+
+def compress(grads, error_feedback):
+    """-> (compressed pytree of (int8, scale), new error feedback)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    qs, errs = zip(*[_quantize_one(g, e) for g, e in zip(flat_g, flat_e)])
+    comp = jax.tree_util.tree_unflatten(treedef, list(qs))
+    new_ef = jax.tree_util.tree_unflatten(treedef, list(errs))
+    return comp, new_ef
+
+
+def decompress(comp):
+    def one(leaf):
+        q, scale = leaf
+        return q.astype(jnp.float32) * scale
+
+    return jax.tree_util.tree_map(one, comp,
+                                  is_leaf=lambda x: isinstance(x, tuple)
+                                  and len(x) == 2
+                                  and hasattr(x[0], "dtype"))
+
+
+def compressed_bytes(comp) -> int:
+    leaves = jax.tree_util.tree_leaves(comp)
+    return sum(l.size for l in leaves if l.dtype == jnp.int8)

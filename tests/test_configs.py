@@ -1,0 +1,95 @@
+"""Pin every assigned architecture config to its assignment-sheet numbers.
+
+The dry-run exercises these configs at full size; this test makes sure no
+refactor silently drifts a dimension.
+"""
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab) straight from the sheet.
+ASSIGNED = {
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_assigned_dimensions(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+
+
+def test_moe_expert_counts():
+    olmoe = get_config("olmoe-1b-7b")
+    assert (olmoe.n_experts, olmoe.top_k) == (64, 8)
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert (phi.n_experts, phi.top_k) == (16, 2)
+
+
+def test_zamba2_ssm_state():
+    z = get_config("zamba2-2.7b")
+    assert z.ssm_state == 64
+    assert z.family == "hybrid"
+    assert z.n_layers % z.attn_every == 0
+
+
+def test_qwen2_vl_mrope():
+    q = get_config("qwen2-vl-72b")
+    assert q.mrope_sections is not None
+    assert sum(q.mrope_sections) == q.resolved_head_dim // 2
+
+
+def test_hubert_encoder_only():
+    h = get_config("hubert-xlarge")
+    assert h.encoder_only and h.embed_inputs
+    assert not h.has_decode
+
+
+def test_assigned_shapes():
+    grid = {s.name: (s.seq_len, s.global_batch) for s in SHAPES}
+    assert grid == {
+        "train_4k": (4096, 256),
+        "prefill_32k": (32768, 32),
+        "decode_32k": (32768, 128),
+        "long_500k": (524288, 1),
+    }
+
+
+def test_param_counts_in_expected_band():
+    """Model names encode sizes: verify the spec trees land in-band."""
+    bands = {
+        "stablelm-1.6b": (1.2e9, 2.2e9),
+        "starcoder2-3b": (2.8e9, 3.5e9),
+        "mistral-large-123b": (1.05e11, 1.4e11),
+        "olmoe-1b-7b": (5.5e9, 8.5e9),
+        "phi3.5-moe-42b-a6.6b": (3.4e10, 4.8e10),
+        "qwen2-vl-72b": (6.0e10, 8.2e10),
+        "rwkv6-1.6b": (1.1e9, 2.2e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    active = phi.active_param_count()
+    total = phi.param_count()
+    assert active < 0.3 * total          # 2 of 16 experts active
+    assert 5e9 <= active <= 9e9          # "a6.6b"

@@ -1,0 +1,253 @@
+"""Validation of the COAXIAL reproduction against the paper's own claims.
+
+Every test here pins a number the paper states explicitly (see DESIGN.md §1
+for the claim table).  Tolerances reflect that our CPU model is analytical
+where the paper's is cycle-level; headline aggregates are tight, per-workload
+values get wider bands.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import coaxial, cpu_model, hw, queueing
+from repro.core.workloads import NAMES, WORKLOADS
+
+
+# ---------------------------------------------------------------------------
+# §3.1 / Fig 2a: the calibrated load-latency curve hits the stated anchors.
+# ---------------------------------------------------------------------------
+
+class TestLoadLatencyCurve:
+    def test_unloaded_latency(self):
+        assert float(queueing.avg_latency_ns(0.0)) == pytest.approx(40.0)
+
+    def test_avg_3x_at_50pct(self):
+        assert float(queueing.avg_latency_ns(0.5)) == pytest.approx(120.0,
+                                                                    rel=1e-3)
+
+    def test_avg_4x_at_60pct(self):
+        assert float(queueing.avg_latency_ns(0.6)) == pytest.approx(160.0,
+                                                                    rel=1e-3)
+
+    def test_p90_4p7x_at_50pct(self):
+        assert float(queueing.p90_latency_ns(0.5)) == pytest.approx(
+            4.7 * 40.0, rel=0.01)
+
+    def test_p90_7p1x_at_60pct(self):
+        assert float(queueing.p90_latency_ns(0.6)) == pytest.approx(
+            7.1 * 40.0, rel=0.01)
+
+    def test_worked_example_60_to_15(self):
+        """§3.1: 4x bandwidth moves 60% util to 15%; with the 30ns premium
+        the average drops ~50% and p90 ~68%."""
+        base_avg = float(queueing.avg_latency_ns(0.60))
+        base_p90 = float(queueing.p90_latency_ns(0.60))
+        cxl_avg = float(queueing.avg_latency_ns(0.15)) + 30.0
+        cxl_p90 = float(queueing.p90_latency_ns(0.15)) + 30.0
+        assert 1 - cxl_avg / base_avg == pytest.approx(0.50, abs=0.05)
+        assert 1 - cxl_p90 / base_p90 == pytest.approx(0.68, abs=0.05)
+
+    def test_monotone_in_load(self):
+        rhos = np.linspace(0.0, 0.95, 40)
+        lat = np.asarray(queueing.avg_latency_ns(rhos))
+        assert np.all(np.diff(lat) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 / §6.1: main result.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def c4():
+    return coaxial.evaluate(coaxial.COAXIAL_4X)
+
+
+class TestMainResult:
+    def test_geomean_speedup(self, c4):
+        # Paper: 1.52x average speedup.
+        assert c4.geomean_speedup == pytest.approx(1.52, abs=0.06)
+
+    def test_lbm_speedup(self, c4):
+        # Paper: up to 3x, for lbm.
+        lbm = float(c4.speedup[NAMES.index("lbm")])
+        assert 2.5 <= lbm <= 3.3
+
+    def test_count_above_2x(self, c4):
+        # Paper: 10 of 35 workloads above 2x.
+        assert 8 <= c4.n_above_2x <= 13
+
+    def test_four_regressions_worst_gcc(self, c4):
+        # Paper: four workloads lose performance, gcc worst at -26%.
+        assert 3 <= c4.n_regressions <= 6
+        name, worst = c4.worst
+        assert name == "gcc"
+        assert 0.60 <= worst <= 0.80
+
+    def test_queue_share_of_latency(self, c4):
+        # Paper §3.1: queuing is 72% of access latency on average, 91% max.
+        s = c4.summary()
+        assert s["queue_share_of_latency"] == pytest.approx(0.72, abs=0.05)
+        assert s["max_queue_share"] == pytest.approx(0.91, abs=0.03)
+
+    def test_queue_reduction(self, c4):
+        # Paper §6.1: queuing 144ns -> 31ns on average (model: same story).
+        s = c4.summary()
+        assert s["mean_base_queue_ns"] > 4 * s["mean_queue_ns"]
+        assert s["mean_queue_ns"] < 60.0
+
+    def test_stream_copy_case_study(self, c4):
+        # Paper §6.1: 348ns -> 120ns, ~2.9x more request throughput.
+        row = c4.row("stream-copy")
+        assert row["base_latency_ns"] == pytest.approx(348.0, abs=40.0)
+        assert row["latency_ns"] == pytest.approx(120.0, abs=25.0)
+        assert row["speedup"] == pytest.approx(2.9, abs=0.4)
+
+    def test_utilization_drops_despite_more_traffic(self, c4):
+        # Fig 5 bottom: average utilization drops ~54% -> ~34% band.
+        s = c4.summary()
+        assert s["mean_base_rho"] > 0.45
+        assert s["mean_rho"] < 0.5 * s["mean_base_rho"] + 0.1
+
+    def test_baseline_calibration_consistency(self):
+        """The solved baseline must reproduce Table 4's IPC (self-check)."""
+        res = cpu_model.solve(cpu_model.DDR_BASELINE)
+        table = np.array([w.ipc for w in WORKLOADS])
+        np.testing.assert_allclose(res.ipc, table, rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Fig 7 / §6.3: design points.
+# ---------------------------------------------------------------------------
+
+class TestDesignPoints:
+    def test_coaxial_2x(self):
+        c2 = coaxial.evaluate(coaxial.COAXIAL_2X)
+        assert c2.geomean_speedup == pytest.approx(1.26, abs=0.08)
+
+    def test_coaxial_asym(self):
+        ca = coaxial.evaluate(coaxial.COAXIAL_ASYM)
+        assert ca.geomean_speedup == pytest.approx(1.67, abs=0.16)
+
+    def test_asym_beats_4x(self, c4):
+        ca = coaxial.evaluate(coaxial.COAXIAL_ASYM)
+        assert ca.geomean_speedup > c4.geomean_speedup
+
+    def test_ordering(self, c4):
+        c2 = coaxial.evaluate(coaxial.COAXIAL_2X)
+        assert c2.geomean_speedup < c4.geomean_speedup
+
+
+# ---------------------------------------------------------------------------
+# Fig 8 / §6.4: latency sensitivity.
+# ---------------------------------------------------------------------------
+
+class TestLatencySensitivity:
+    def test_50ns_speedup(self):
+        c50 = coaxial.evaluate(coaxial.COAXIAL_4X,
+                               iface_lat_ns=hw.CXL_LAT_PESSIMISTIC_NS)
+        assert c50.geomean_speedup == pytest.approx(1.33, abs=0.12)
+
+    def test_50ns_worse_than_30ns(self, c4):
+        c50 = coaxial.evaluate(coaxial.COAXIAL_4X, iface_lat_ns=50.0)
+        assert c50.geomean_speedup < c4.geomean_speedup
+
+    def test_more_regressions_at_50ns(self, c4):
+        c50 = coaxial.evaluate(coaxial.COAXIAL_4X, iface_lat_ns=50.0)
+        assert c50.n_regressions >= c4.n_regressions
+
+
+# ---------------------------------------------------------------------------
+# Fig 9 / §6.5: core-utilization sensitivity.
+# ---------------------------------------------------------------------------
+
+class TestCoreUtilization:
+    def test_single_core_slows_down(self):
+        c1 = coaxial.evaluate(coaxial.COAXIAL_4X, n_active=1)
+        # Paper: -17% average; our analytical model is harsher (-28%)
+        # because it holds CPI_exec fixed -- the direction and "virtually
+        # all workloads suffer" claim are what we pin.
+        assert 0.65 <= c1.geomean_speedup <= 0.90
+        assert np.mean(c1.speedup < 1.0) > 0.9
+
+    def test_xalancbmk_llc_corner(self):
+        c1 = coaxial.evaluate(coaxial.COAXIAL_4X, n_active=1)
+        x = float(c1.speedup[NAMES.index("xalancbmk")])
+        assert x == pytest.approx(1.0, abs=0.05)
+
+    def test_66pct_utilization(self):
+        c8 = coaxial.evaluate(coaxial.COAXIAL_4X, n_active=8)
+        assert c8.geomean_speedup == pytest.approx(1.27, abs=0.08)
+
+    def test_monotone_in_utilization(self):
+        gms = [coaxial.evaluate(coaxial.COAXIAL_4X, n_active=n).geomean_speedup
+               for n in (1, 4, 8, 12)]
+        assert all(a < b for a, b in zip(gms, gms[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Fig 3 / §3.2: variance-only experiment.
+# ---------------------------------------------------------------------------
+
+class TestVarianceExperiment:
+    def test_geomeans(self):
+        out = cpu_model.variance_experiment()
+        gms = [v["geomean"] for v in out.values()]
+        assert gms[0] == pytest.approx(0.86, abs=0.04)
+        assert gms[1] == pytest.approx(0.78, abs=0.04)
+        assert gms[2] == pytest.approx(0.71, abs=0.05)
+
+    def test_stdevs_are_as_stated(self):
+        out = cpu_model.variance_experiment()
+        stds = [v["stdev_ns"] for v in out.values()]
+        np.testing.assert_allclose(stds, [100.0, 150.0, 200.0], rtol=1e-6)
+
+    def test_monotone_in_variance(self):
+        out = cpu_model.variance_experiment()
+        gms = [v["geomean"] for v in out.values()]
+        assert gms[0] > gms[1] > gms[2]
+
+
+# ---------------------------------------------------------------------------
+# Tables 1-2: pins and area.
+# ---------------------------------------------------------------------------
+
+class TestPinsAndArea:
+    def test_bw_per_pin_4x(self):
+        # §2.3: "The 4x bandwidth gap is where we are today", and it is
+        # conservative because PCIe's figure is per direction.
+        rep = coaxial.pin_report()
+        assert rep["bw_per_pin_ratio"] == pytest.approx(4.0, abs=0.5)
+        assert rep["bw_per_pin_ratio_duplex"] > rep["bw_per_pin_ratio"]
+
+    def test_table2_areas(self):
+        rep = coaxial.area_report()
+        assert rep["coaxial-5x"]["rel_area"] == pytest.approx(1.17, abs=0.01)
+        assert rep["coaxial-2x"]["rel_area"] == pytest.approx(1.01, abs=0.01)
+        assert rep["coaxial-4x"]["rel_area"] == pytest.approx(1.01, abs=0.01)
+
+    def test_iso_pin_5x(self):
+        rep = coaxial.area_report()
+        assert rep["coaxial-5x"]["rel_pins"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Table 5 / §6.6: power and EDP.
+# ---------------------------------------------------------------------------
+
+class TestEDP:
+    @pytest.fixture(scope="class")
+    def edp(self):
+        return coaxial.edp_report()
+
+    def test_baseline_power(self, edp):
+        assert edp["baseline"]["total_w"] == pytest.approx(713.0, abs=40.0)
+
+    def test_coaxial_power(self, edp):
+        assert edp["coaxial"]["total_w"] == pytest.approx(1180.0, abs=90.0)
+
+    def test_edp_ratio(self, edp):
+        assert edp["edp_ratio"] == pytest.approx(0.72, abs=0.06)
+
+    def test_power_components(self, edp):
+        assert edp["coaxial"]["cxl_iface_w"] == pytest.approx(77.0, abs=1.0)
+        assert edp["coaxial"]["ddr_mc_phy_w"] == pytest.approx(52.0, abs=1.0)

@@ -1,0 +1,357 @@
+"""Substrate tests: optimizer, compression, checkpointing, fault tolerance,
+data pipeline, sharding helpers, HLO analysis."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core import hloparse
+from repro.data.pipeline import PrefetchIterator, SyntheticDataset
+from repro.distributed import fault
+from repro.models.config import smoke_variant
+from repro.optim import adamw, compression
+from repro.optim.adamw import AdamWConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class TestAdamW:
+    def _setup(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16),
+                  "b": jnp.zeros((4,), jnp.bfloat16)}
+        state = adamw.init(params)
+        return params, state
+
+    def test_descends_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=100)
+        params = {"w": jnp.full((8,), 5.0)}
+        state = adamw.init(params)
+
+        def loss(p):
+            return jnp.sum(jnp.square(p["w"]))
+
+        p = params
+        losses = []
+        for i in range(80):
+            g = jax.grad(loss)(p)
+            p, state, _ = adamw.update(cfg, g, state, jnp.int32(i),
+                                       param_dtype=jnp.float32)
+            losses.append(float(loss(p)))
+        assert losses[-1] < 2.0
+        assert losses[-1] < 0.05 * losses[0]
+
+    def test_clip_norm(self):
+        cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+        params, state = self._setup()
+        grads = {"w": jnp.full((4, 4), 100.0), "b": jnp.full((4,), 100.0)}
+        _, _, metrics = adamw.update(cfg, grads, state, jnp.int32(0))
+        assert float(metrics["grad_norm"]) > 100.0  # measured pre-clip
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        lrs = [float(adamw.schedule(cfg, jnp.int32(s)))
+               for s in (0, 5, 10, 50, 100)]
+        assert lrs[0] == pytest.approx(1e-4)
+        assert lrs[1] == pytest.approx(6e-4)
+        assert lrs[2] == pytest.approx(1e-3)
+        assert lrs[3] < lrs[2]
+        assert lrs[4] == pytest.approx(cfg.lr * cfg.min_lr_ratio, rel=1e-3)
+
+    def test_master_weights_do_not_alias(self):
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = adamw.init(params)
+        assert state["master"]["w"] is not params["w"]
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+        ef = compression.init_error_feedback(g)
+        comp, ef2 = compression.compress(g, ef)
+        rec = compression.decompress(comp)
+        err = np.abs(np.asarray(rec["w"]) - np.asarray(g["w"])).max()
+        scale = float(np.abs(np.asarray(g["w"])).max()) / 127.0
+        assert err <= scale + 1e-6
+
+    def test_error_feedback_accumulates(self):
+        """EF carries quantization residue: sum over steps converges."""
+        g = {"w": jnp.full((16,), 0.001)}   # much smaller than scale step
+        ef = compression.init_error_feedback(g)
+        total = np.zeros(16)
+        for _ in range(50):
+            comp, ef = compression.compress(g, ef)
+            total += np.asarray(compression.decompress(comp)["w"])
+        # Without EF the tiny gradient would vanish; with EF the running sum
+        # tracks 50 * g.
+        np.testing.assert_allclose(total, 0.05, rtol=0.2)
+
+    def test_compressed_is_int8(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(1), (32,))}
+        comp, _ = compression.compress(g, compression.init_error_feedback(g))
+        q, scale = comp["w"]
+        assert q.dtype == jnp.int8
+        assert compression.compressed_bytes(comp) == 32
+
+    @settings(max_examples=20, deadline=None)
+    @given(scale=st.floats(1e-3, 1e3))
+    def test_property_quantization_error_bound(self, scale):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(2), (128,)) * scale}
+        ef = compression.init_error_feedback(g)
+        comp, ef2 = compression.compress(g, ef)
+        rec = compression.decompress(comp)
+        # residual == what error-feedback remembers
+        np.testing.assert_allclose(
+            np.asarray(g["w"]) - np.asarray(rec["w"]), np.asarray(ef2["w"]),
+            atol=1e-5 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+                "step": jnp.int32(7)}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(tree, str(tmp_path), 7)
+        loaded, step = ckpt.restore(tree, str(tmp_path))
+        assert step == 7
+        np.testing.assert_array_equal(loaded["params"]["w"],
+                                      tree["params"]["w"])
+
+    def test_latest_and_retention(self, tmp_path):
+        tree = self._tree()
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(tree, str(tmp_path), s)
+        assert ckpt.latest_step(str(tmp_path)) == 5
+        ckpt.retain(str(tmp_path), keep=2)
+        steps = sorted(int(d.split("-")[1]) for d in os.listdir(tmp_path)
+                       if d.startswith("step-"))
+        assert steps == [4, 5]
+
+    def test_async_checkpointer(self, tmp_path):
+        tree = self._tree()
+        acp = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+        for s in (10, 20):
+            acp.save(tree, s)
+        acp.close()
+        assert ckpt.latest_step(str(tmp_path)) == 20
+
+    def test_atomicity_no_partial_dirs(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(tree, str(tmp_path), 1)
+        names = os.listdir(tmp_path)
+        assert all(not n.startswith(".tmp") for n in names)
+
+    def test_elastic_reshard_restore(self, tmp_path):
+        """Restore under a different sharding (1-device 'new mesh')."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tree = self._tree()
+        ckpt.save(tree, str(tmp_path), 3)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), tree)
+        loaded, _ = ckpt.restore(tree, str(tmp_path), shardings=sh)
+        np.testing.assert_array_equal(loaded["params"]["w"],
+                                      tree["params"]["w"])
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+class TestFault:
+    def test_retry_then_success(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise fault.StepFailure("transient")
+
+        runner = fault.ResilientRunner(lambda x: x + 1, max_retries=3,
+                                       failure_injector=flaky)
+        assert runner.run_step(1) == 2
+        assert runner.retries_total == 2
+
+    def test_restore_after_exhausted_retries(self):
+        calls = {"n": 0}
+
+        def always_fail_twice():
+            calls["n"] += 1
+            if calls["n"] <= 4:
+                raise fault.StepFailure("persistent")
+
+        restored = {"n": 0}
+
+        def on_restore(x):
+            restored["n"] += 1
+            return (x,), {}
+
+        runner = fault.ResilientRunner(lambda x: x * 10, max_retries=1,
+                                       on_restore=on_restore,
+                                       failure_injector=always_fail_twice)
+        assert runner.run_step(5) == 50
+        assert restored["n"] >= 1
+
+    def test_straggler_detection(self):
+        mon = fault.StragglerMonitor(window=8, threshold=2.0)
+        import time as _t
+        for i in range(8):
+            mon.start()
+            _t.sleep(0.002)
+            mon.stop()
+        mon.start()
+        _t.sleep(0.05)
+        assert mon.stop() is True
+        assert len(mon.straggler_steps) == 1
+
+    def test_heartbeat(self, tmp_path):
+        hb = fault.Heartbeat(str(tmp_path / "hb"), interval_s=0.0)
+        hb.beat(3)
+        assert fault.Heartbeat.is_alive(str(tmp_path / "hb"))
+        assert not fault.Heartbeat.is_alive(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_determinism(self):
+        cfg = smoke_variant(get_config("stablelm-1.6b"))
+        ds = SyntheticDataset(cfg, 4, 32, seed=7)
+        b1, b2 = ds.batch_at(5), ds.batch_at(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = ds.batch_at(6)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_prefetch_order_and_restart(self):
+        cfg = smoke_variant(get_config("stablelm-1.6b"))
+        ds = SyntheticDataset(cfg, 2, 16)
+        it = PrefetchIterator(ds, start_step=3)
+        s0, b0 = next(it)
+        s1, b1 = next(it)
+        it.close()
+        assert (s0, s1) == (3, 4)
+        np.testing.assert_array_equal(b0["tokens"], ds.batch_at(3)["tokens"])
+
+    def test_targets_shifted(self):
+        cfg = smoke_variant(get_config("stablelm-1.6b"))
+        b = SyntheticDataset(cfg, 2, 16).batch_at(0)
+        assert b["tokens"].shape == b["targets"].shape
+        assert (b["targets"] < cfg.vocab).all()
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis (the loop-scaling parser behind the roofline).
+# ---------------------------------------------------------------------------
+
+class TestHloParse:
+    def _compile(self, fn, *specs):
+        return jax.jit(fn).lower(*specs).compile().as_text()
+
+    def test_dot_flops_exact(self):
+        w = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+        txt = self._compile(lambda w, x: x @ w, w, x)
+        cost = hloparse.analyze(txt)
+        assert cost.flops == pytest.approx(2 * 32 * 128 * 64, rel=0.01)
+
+    @pytest.mark.parametrize("n", [2, 8, 32])
+    def test_while_trip_scaling(self, n):
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+
+        def f(w, x):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=n)
+            return out
+
+        cost = hloparse.analyze(self._compile(f, w, x))
+        assert cost.flops == pytest.approx(n * 2 * 16 * 64 * 64, rel=0.05)
+
+    def test_nested_scan_scaling(self):
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+
+        def f(w, x):
+            def outer(c, _):
+                def inner(c2, _):
+                    return jnp.tanh(c2 @ w), None
+                c, _ = jax.lax.scan(inner, c, None, length=3)
+                return c, None
+            out, _ = jax.lax.scan(outer, x, None, length=5)
+            return out
+
+        cost = hloparse.analyze(self._compile(f, w, x))
+        assert cost.flops == pytest.approx(15 * 2 * 16 * 64 * 64, rel=0.05)
+
+    def test_bytes_grow_with_trip_count(self):
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+
+        def mk(n):
+            def f(w, x):
+                def body(c, _):
+                    return jnp.tanh(c @ w), None
+                out, _ = jax.lax.scan(body, x, None, length=n)
+                return out
+            return f
+
+        c2 = hloparse.analyze(self._compile(mk(2), w, x))
+        c8 = hloparse.analyze(self._compile(mk(8), w, x))
+        assert c8.bytes > 3 * c2.bytes
+
+
+# ---------------------------------------------------------------------------
+# H4': int8-on-the-wire all-reduce (numerics; the byte proof is
+# repro.launch.dryrun --collective-proof).
+# ---------------------------------------------------------------------------
+
+class TestInt8Collectives:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_roundtrip_error_bounded(self):
+        from repro.distributed import int8_collectives as i8
+        red = i8.make_reducer(self._mesh(), int8=True)
+        x = {"w": jax.random.normal(jax.random.PRNGKey(0), (37, 13))}
+        out = jax.jit(red)(x)
+        scale = float(jnp.abs(x["w"]).max()) / 127.0
+        err = float(jnp.abs(out["w"] - x["w"]).max())
+        assert err <= 2 * scale + 1e-6     # quantize + requantize steps
+
+    def test_f32_reducer_exact(self):
+        from repro.distributed import int8_collectives as i8
+        red = i8.make_reducer(self._mesh(), int8=False)
+        x = {"w": jnp.arange(12.0).reshape(3, 4)}
+        out = jax.jit(red)(x)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(x["w"]), rtol=1e-6)
+
+    def test_non_divisible_padding(self):
+        from repro.distributed import int8_collectives as i8
+        red = i8.make_reducer(self._mesh(), int8=True)
+        x = {"w": jax.random.normal(jax.random.PRNGKey(1), (7,))}
+        out = jax.jit(red)(x)
+        assert out["w"].shape == (7,)
