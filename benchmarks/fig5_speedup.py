@@ -1,6 +1,9 @@
 """Fig 5: COAXIAL-4x vs DDR baseline -- the paper's main result.
 
 Paper: 1.52x geomean, lbm ~3x, 10/35 above 2x, 4 regressions (gcc worst).
+
+Sliced from the shared :func:`coaxial.default_sweep` grid -- the whole
+fig5/7/8/9 + table5 report costs one XLA compile.
 """
 
 from benchmarks.common import emit, time_call
@@ -8,8 +11,8 @@ from repro.core import coaxial
 
 
 def main():
-    us, cmp = time_call(lambda: coaxial.evaluate(coaxial.COAXIAL_4X),
-                        iters=1)
+    us, sw = time_call(coaxial.default_sweep, warmup=0, iters=1)
+    cmp = sw.comparison(coaxial.COAXIAL_4X)
     for i, n in enumerate(cmp.names):
         emit(f"fig5.{n}.speedup", us / len(cmp.names),
              f"{cmp.speedup[i]:.3f}")

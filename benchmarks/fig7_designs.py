@@ -1,17 +1,22 @@
-"""Fig 7: design points -- COAXIAL-2x / 4x / asym (+5x iso-pin).
+"""Fig 7: design points -- every registered design vs the DDR baseline.
 
-Paper geomeans: 1.26 / 1.52 / 1.67."""
+Paper geomeans: 1.26 (2x) / 1.52 (4x) / 1.67 (asym).  All slices of the one
+shared sweep; registry additions show up here automatically.
+"""
 
 from benchmarks.common import emit, time_call
 from repro.core import coaxial
 
 
 def main():
-    for sys in (coaxial.COAXIAL_2X, coaxial.COAXIAL_4X, coaxial.COAXIAL_5X,
-                coaxial.COAXIAL_ASYM):
-        us, cmp = time_call(lambda s=sys: coaxial.evaluate(s), iters=1)
+    us, sw = time_call(coaxial.default_sweep, warmup=0, iters=1)
+    for sys in sw.designs:
+        if sys.name == sw.baseline_name:
+            continue
+        cmp = sw.comparison(sys)
         emit(f"fig7.{sys.name}.geomean_speedup", us,
              f"{cmp.geomean_speedup:.3f}")
+        us = 0.0
 
 
 if __name__ == "__main__":

@@ -1,18 +1,20 @@
 """Fig 9: speedup vs active cores (8% / 33% / 66% / 100% utilization).
 
-Paper: -17% at 1 core; 1.27x at 8 cores; 1.52x at 12."""
+Paper: -17% at 1 core; 1.27x at 8 cores; 1.52x at 12.  The core-count axis
+is one dimension of the shared sweep grid.
+"""
 
 from benchmarks.common import emit, time_call
 from repro.core import coaxial
 
 
 def main():
-    for n in (1, 4, 8, 12):
-        us, cmp = time_call(
-            lambda c=n: coaxial.evaluate(coaxial.COAXIAL_4X, n_active=c),
-            iters=1)
+    us, sw = time_call(coaxial.default_sweep, warmup=0, iters=1)
+    for n in sw.cores:
+        cmp = sw.comparison(coaxial.COAXIAL_4X, n_active=n)
         emit(f"fig9.cores{n}.geomean_speedup", us,
              f"{cmp.geomean_speedup:.3f}")
+        us = 0.0
 
 
 if __name__ == "__main__":

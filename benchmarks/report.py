@@ -1,8 +1,10 @@
-"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline / §Coaxial tables.
 
     PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
 
-Markdown to stdout; EXPERIMENTS.md embeds the output.
+Markdown to stdout; EXPERIMENTS.md embeds the output.  The §Coaxial table
+is sliced from the one shared design-space sweep (a single XLA compile for
+every design x latency x core-count cell).
 """
 
 import argparse
@@ -91,11 +93,32 @@ def variant_table(arch: str, shape: str, mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+def coaxial_table() -> str:
+    """Geomean speedup vs baseline for every registered design, at both
+    §6.4 latency points and every §6.5 core count -- one sweep, one table."""
+    from repro.core import coaxial
+    sw = coaxial.default_sweep()
+    gm = sw.geomean_grid()          # (D, L, C)
+    lat_labels = ["default" if l is None else f"{l:.0f}ns"
+                  for l in sw.iface_lats]
+    header = ["design"] + [f"{lab} @{c}c" for lab in lat_labels
+                           for c in sw.cores]
+    lines = ["| " + " | ".join(header) + " |",
+             "|" + "---|" * len(header)]
+    for i, d in enumerate(sw.designs):
+        if d.name == sw.baseline_name:
+            continue
+        cells = [f"{gm[i, j, k]:.3f}" for j in range(len(sw.iface_lats))
+                 for k in range(len(sw.cores))]
+        lines.append("| " + " | ".join([d.name] + cells) + " |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline"])
+                    choices=["all", "dryrun", "roofline", "coaxial"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
     args = ap.parse_args()
@@ -109,6 +132,10 @@ def main():
     if args.section in ("all", "roofline"):
         print(f"### Roofline ({args.mesh})\n")
         print(roofline_table(args.mesh))
+        print()
+    if args.section in ("all", "coaxial"):
+        print("### Coaxial design-space sweep\n")
+        print(coaxial_table())
 
 
 if __name__ == "__main__":

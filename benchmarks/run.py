@@ -20,16 +20,31 @@ MODULES = [
     "benchmarks.fig9_utilization",
     "benchmarks.table2_designs",
     "benchmarks.table5_edp",
+    "benchmarks.sweep_grid",
     "benchmarks.stream_kernels",
     "benchmarks.channelized_decode",
     "benchmarks.roofline",
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes (e.g. "
+                         "'fig2a_load_latency,table2_designs') -- the CI "
+                         "smoke subset")
+    args = ap.parse_args(argv)
+    modules = MODULES
+    if args.only:
+        wanted = {m.strip() for m in args.only.split(",")}
+        modules = [m for m in MODULES if m.split(".")[-1] in wanted]
+        missing = wanted - {m.split(".")[-1] for m in modules}
+        if missing:
+            raise SystemExit(f"unknown benchmark modules: {sorted(missing)}")
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         try:
             mod = importlib.import_module(mod_name)
             mod.main()

@@ -1,0 +1,66 @@
+"""Dense design-space grid: the batched sweep engine vs a per-point loop.
+
+Sweeps (baseline + 10 channel counts) x 10 CXL latency premiums (110 grid
+points, all 35 workloads each = 3850 model solutions) in ONE jitted,
+vmapped call, then times the same grid as a Python loop of single-point
+``solve()`` calls.
+The loop already shares the sweep engine's single-point compilation (the
+old code recompiled per design), so the remaining gap is pure dispatch /
+fixed-point batching -- the sweep's advantage grows with grid size.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial, cpu_model, hw
+
+CHANNELS = range(1, 11)
+LATENCIES = tuple(float(l) for l in np.linspace(10.0, 100.0, 10))
+
+
+def _grid_designs():
+    return [
+        cpu_model.MemSystem(
+            f"grid-cxl-{ch}x", dram_channels=ch, links=ch,
+            link_rd_gbps=hw.CXL_X8_RD_GBPS, link_wr_gbps=hw.CXL_X8_WR_GBPS,
+            iface_lat_ns=hw.CXL_LAT_NS, llc_mb_per_core=1.0)
+        for ch in CHANNELS
+    ]
+
+
+def main():
+    # Baseline included explicitly so the batched grid and the per-point
+    # loop solve the SAME point set (sweep() would prepend it anyway).
+    designs = [cpu_model.DDR_BASELINE] + _grid_designs()
+    n_points = len(designs) * len(LATENCIES)
+
+    # Both sides timed compile-warm (warmup=1 pays each path's XLA trace),
+    # so the ratio is pure steady-state dispatch + batching.
+    t0 = cpu_model.solve_trace_count()
+    us_batch, sw = time_call(
+        lambda: coaxial.sweep(designs, iface_lat_grid=LATENCIES),
+        warmup=1, iters=1)
+    traces = cpu_model.solve_trace_count() - t0
+    assert len(sw.designs) == len(designs)
+
+    def loop():
+        return [cpu_model.solve(d, iface_lat_ns=lat if d.is_cxl else None)
+                for d in designs for lat in LATENCIES]
+
+    us_loop, _ = time_call(loop, warmup=1, iters=1)
+
+    gm = sw.geomean_grid()          # (D, L, 1) incl. prepended baseline
+    best = np.unravel_index(np.argmax(gm), gm.shape)
+    emit("sweep_grid.points", 0.0, n_points)
+    emit("sweep_grid.batched_us", us_batch, f"{us_batch / n_points:.0f}")
+    emit("sweep_grid.loop_us", us_loop, f"{us_loop / n_points:.0f}")
+    emit("sweep_grid.loop_over_batched", 0.0,
+         f"{us_loop / max(us_batch, 1e-9):.1f}")
+    emit("sweep_grid.traces_for_grid", 0.0, traces)
+    emit("sweep_grid.best_geomean", 0.0,
+         f"{sw.designs[best[0]].name}@{sw.iface_lats[best[1]]:.0f}ns="
+         f"{gm[best]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-"""Table 2: pins / relative area of the server design points."""
+"""Table 2: pins / relative area, derived per registered design."""
 
 from benchmarks.common import emit
 from repro.core import coaxial
@@ -7,7 +7,7 @@ from repro.core import coaxial
 def main():
     pins = coaxial.pin_report()
     emit("table2.bw_per_pin_ratio", 0.0, f"{pins['bw_per_pin_ratio']:.2f}")
-    for name, row in coaxial.area_report().items():
+    for name, row in coaxial.area_report(coaxial.all_designs()).items():
         emit(f"table2.{name}.rel_area", 0.0, f"{row['rel_area']:.3f}")
         emit(f"table2.{name}.rel_pins", 0.0, f"{row['rel_pins']:.3f}")
 

@@ -18,11 +18,13 @@ PAPER = {
 
 def main():
     print(f"{'metric':34s} {'paper':>8s} {'ours':>8s}")
-    c4 = coaxial.evaluate(coaxial.COAXIAL_4X)
-    c2 = coaxial.evaluate(coaxial.COAXIAL_2X)
-    ca = coaxial.evaluate(coaxial.COAXIAL_ASYM)
-    c50 = coaxial.evaluate(coaxial.COAXIAL_4X, iface_lat_ns=50.0)
-    edp = coaxial.edp_report()
+    # One batched sweep solves every (design, latency, core-count) cell.
+    sw = coaxial.default_sweep()
+    c4 = sw.comparison(coaxial.COAXIAL_4X)
+    c2 = sw.comparison(coaxial.COAXIAL_2X)
+    ca = sw.comparison(coaxial.COAXIAL_ASYM)
+    c50 = sw.comparison(coaxial.COAXIAL_4X, iface_lat=50.0)
+    edp = coaxial.edp_report(coaxial.COAXIAL_4X, cmp=c4)
     rows = [
         ("geomean speedup, COAXIAL-4x", PAPER["coaxial-4x"],
          c4.geomean_speedup),

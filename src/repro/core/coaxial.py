@@ -2,31 +2,89 @@
 
 Everything the paper reports is derivable from here:
 
+  * :func:`sweep` -- the design-space engine: one jitted pass over
+    designs x interface latencies x active-core counts, returning a
+    :class:`SweepResult` from which all figures slice;
   * :func:`evaluate` -- per-workload speedups, latency breakdowns and
     utilizations for any design point (Figs 5, 7, 8, 9);
+  * :func:`register_design` / :func:`get_design` / :func:`all_designs` --
+    the design registry (configs and the planner can add points);
   * :func:`area_report` / :func:`pin_report` -- Table 1/2 accounting;
   * :func:`edp_report` -- the §6.6 power and energy-delay-product model
     (Table 5);
   * :func:`sensitivity_latency` / :func:`sensitivity_cores` -- §6.4 / §6.5.
+
+The sweep engine is what makes dense grids cheap: ``sweep()`` stacks the
+design points into a :class:`~repro.core.cpu_model.MemSystemArrays` pytree
+and calls the vmapped solver once, so a 100-point channels x latency grid
+costs one XLA compile instead of 100.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 from repro.core import cpu_model, hw
 from repro.core.cpu_model import (COAXIAL_2X, COAXIAL_4X, COAXIAL_5X,
                                   COAXIAL_ASYM, DDR_BASELINE, DESIGNS,
-                                  MemSystem, ModelResult, geomean, solve)
+                                  MemSystem, ModelResult, geomean, solve,
+                                  solve_batch)
 from repro.core.workloads import NAMES, WORKLOADS
 
 __all__ = [
     "COAXIAL_2X", "COAXIAL_4X", "COAXIAL_5X", "COAXIAL_ASYM", "DDR_BASELINE",
-    "DESIGNS", "MemSystem", "evaluate", "Comparison", "area_report",
-    "pin_report", "edp_report", "sensitivity_latency", "sensitivity_cores",
+    "DESIGNS", "MemSystem", "evaluate", "Comparison", "SweepResult", "sweep",
+    "default_sweep", "register_design", "unregister_design", "get_design",
+    "all_designs", "area_report", "pin_report", "edp_report",
+    "sensitivity_latency", "sensitivity_cores",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Design registry.  Seeded with the paper's Table-2 points; configs and the
+# planner register additional points (e.g. channel-count sweeps) at runtime.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, MemSystem] = {}
+
+
+def register_design(sys: MemSystem, *, overwrite: bool = False) -> MemSystem:
+    """Add a design point to the registry (and to every future sweep)."""
+    if not overwrite and sys.name in _REGISTRY:
+        raise ValueError(f"design {sys.name!r} already registered")
+    _REGISTRY[sys.name] = sys
+    default_sweep.cache_clear()
+    return sys
+
+
+def unregister_design(name: str) -> MemSystem:
+    """Remove a registered design point (the seed points may be removed
+    too, but the DDR baseline is always re-added by :func:`sweep`)."""
+    sys = _REGISTRY.pop(name)
+    default_sweep.cache_clear()
+    return sys
+
+
+def get_design(name: str) -> MemSystem:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown design {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def all_designs() -> tuple[MemSystem, ...]:
+    """All registered design points, registration-ordered."""
+    return tuple(_REGISTRY.values())
+
+
+for _d in DESIGNS:
+    _REGISTRY[_d.name] = _d
+del _d
 
 
 @dataclasses.dataclass
@@ -92,26 +150,169 @@ class Comparison:
         )
 
 
+# ---------------------------------------------------------------------------
+# The sweep engine.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Stacked model results over a designs x latencies x cores grid.
+
+    ``results`` arrays have shape ``(D, L, C, n_workloads)`` matching
+    ``designs`` / ``iface_lats`` / ``cores``.  Individual
+    :class:`ModelResult` slices and baseline :class:`Comparison` objects
+    are views into the one batched solve -- no further compilation or
+    fixed-point iteration happens after construction.
+    """
+
+    designs: tuple[MemSystem, ...]
+    iface_lats: tuple           # entries: float override or None (= default)
+    cores: tuple[int, ...]
+    names: tuple[str, ...]
+    results: ModelResult
+    baseline_name: str = DDR_BASELINE.name
+
+    def design_index(self, sys) -> int:
+        name = sys.name if isinstance(sys, MemSystem) else sys
+        for i, d in enumerate(self.designs):
+            if d.name == name:
+                return i
+        raise KeyError(f"design {name!r} not in sweep "
+                       f"{[d.name for d in self.designs]}")
+
+    def _lat_index(self, sys, iface_lat) -> int:
+        if iface_lat in self.iface_lats:
+            return self.iface_lats.index(iface_lat)
+        # A design's own premium and an equal explicit override are the
+        # same grid column for that design (the solver masks per-design).
+        d = self.designs[self.design_index(sys)]
+        if iface_lat is None and d.iface_lat_ns in self.iface_lats:
+            return self.iface_lats.index(d.iface_lat_ns)
+        if iface_lat == d.iface_lat_ns and None in self.iface_lats:
+            return self.iface_lats.index(None)
+        raise KeyError(f"iface_lat {iface_lat!r} not in sweep grid "
+                       f"{self.iface_lats}")
+
+    def _indices(self, sys, iface_lat, n_active) -> tuple[int, int, int]:
+        return (self.design_index(sys), self._lat_index(sys, iface_lat),
+                self.cores.index(n_active))
+
+    def result(self, sys, *, iface_lat=None,
+               n_active: int = hw.SIM_CORES) -> ModelResult:
+        """The ``(n_workloads,)`` ModelResult slice for one grid point."""
+        return self.results[self._indices(sys, iface_lat, n_active)]
+
+    def comparison(self, sys, *, iface_lat=None,
+                   n_active: int = hw.SIM_CORES) -> Comparison:
+        """``sys`` vs the DDR baseline at the same core count.
+
+        The baseline ignores the latency override (it has no CXL
+        interface), so any latency column serves as its reference.
+        """
+        i, j, k = self._indices(sys, iface_lat, n_active)
+        b = self.design_index(self.baseline_name)
+        return Comparison(sys=self.designs[i], base=self.results[b, j, k],
+                          res=self.results[i, j, k], names=self.names)
+
+    def geomean_grid(self) -> np.ndarray:
+        """Geomean speedup vs baseline for every grid point: ``(D, L, C)``."""
+        b = self.design_index(self.baseline_name)
+        ratio = self.results.ipc / self.results.ipc[b][None]
+        return np.exp(np.mean(np.log(ratio), axis=-1))
+
+
+def sweep(designs=None, *, iface_lat_grid=(None,),
+          n_active_grid=(hw.SIM_CORES,), workloads=WORKLOADS,
+          baseline: MemSystem = DDR_BASELINE) -> SweepResult:
+    """Solve a whole design-space grid in one jitted, vmapped pass.
+
+    ``designs`` defaults to every registered design; the baseline is
+    prepended if absent so comparisons can always be sliced.
+    ``iface_lat_grid`` entries override the CXL premium of CXL designs
+    (``None`` = each design's own value).  ``n_active_grid`` are active
+    core counts; calibration is redone per core count, as in the paper.
+    """
+    designs = tuple(designs) if designs is not None else all_designs()
+    if not any(d.name == baseline.name for d in designs):
+        designs = (baseline,) + designs
+    seen: dict[str, MemSystem] = {}
+    for d in designs:
+        prev = seen.setdefault(d.name, d)
+        if prev != d:
+            # Results are sliced by name -- two different designs under one
+            # name would silently shadow each other.
+            raise ValueError(
+                f"two different designs named {d.name!r} in one sweep")
+    designs = tuple(seen.values())
+    res = solve_batch(designs, n_active_grid=n_active_grid,
+                      iface_lat_grid=iface_lat_grid, baseline=baseline,
+                      workloads=workloads)
+    return SweepResult(
+        designs=designs, iface_lats=tuple(iface_lat_grid),
+        cores=tuple(int(n) for n in n_active_grid),
+        names=tuple(w.name for w in workloads), results=res,
+        baseline_name=baseline.name)
+
+
+@functools.lru_cache(maxsize=None)
+def default_sweep() -> SweepResult:
+    """The shared grid behind every figure/table: all registered designs,
+    both §6.4 latency points, all §6.5 core counts.  One compile serves the
+    entire benchmark report; cache is invalidated when the registry changes.
+    """
+    return sweep(iface_lat_grid=(None, hw.CXL_LAT_PESSIMISTIC_NS),
+                 n_active_grid=(1, 4, 8, hw.SIM_CORES))
+
+
+def _unshadow(sys: MemSystem) -> MemSystem:
+    """Rename a modified design that still carries the baseline's name.
+
+    Sweep results are name-keyed; without the rename such a design would
+    either shadow the comparator or be rejected by sweep()'s dedup check.
+    """
+    if sys.name == DDR_BASELINE.name and sys != DDR_BASELINE:
+        return dataclasses.replace(sys, name=f"{sys.name}*")
+    return sys
+
+
 def evaluate(sys: MemSystem = COAXIAL_4X, *, n_active: int = hw.SIM_CORES,
              iface_lat_ns: float | None = None,
              workloads=WORKLOADS) -> Comparison:
-    base = solve(DDR_BASELINE, n_active=n_active, workloads=workloads)
-    res = solve(sys, n_active=n_active, iface_lat_ns=iface_lat_ns,
-                workloads=workloads)
-    return Comparison(sys=sys, base=base, res=res,
-                      names=tuple(w.name for w in workloads))
+    res_sys = sys
+    if iface_lat_ns is not None and not sys.is_cxl:
+        # The sweep grid's latency override only reaches CXL designs, but
+        # evaluate() historically applied an explicit premium to any design
+        # -- bake it into the design point.
+        res_sys = dataclasses.replace(
+            sys, name=f"{sys.name}@{iface_lat_ns:g}ns",
+            iface_lat_ns=float(iface_lat_ns))
+    res_sys = _unshadow(res_sys)
+    sw = sweep((DDR_BASELINE, res_sys), iface_lat_grid=(iface_lat_ns,),
+               n_active_grid=(n_active,), workloads=workloads)
+    cmp = sw.comparison(res_sys, iface_lat=iface_lat_ns, n_active=n_active)
+    if res_sys is not sys:
+        cmp = dataclasses.replace(cmp, sys=sys)
+    return cmp
 
 
 def sensitivity_latency(latencies_ns=(hw.CXL_LAT_NS,
                                       hw.CXL_LAT_PESSIMISTIC_NS),
                         sys: MemSystem = COAXIAL_4X) -> dict:
     """§6.4: COAXIAL speedup at 30ns vs 50ns CXL premium (Fig 8)."""
-    return {lat: evaluate(sys, iface_lat_ns=lat) for lat in latencies_ns}
+    if not sys.is_cxl:
+        # Latency overrides bypass non-CXL designs inside the grid; per-
+        # point evaluate() bakes the premium in (still one compile total).
+        return {lat: evaluate(sys, iface_lat_ns=lat) for lat in latencies_ns}
+    sys = _unshadow(sys)
+    sw = sweep((DDR_BASELINE, sys), iface_lat_grid=tuple(latencies_ns))
+    return {lat: sw.comparison(sys, iface_lat=lat) for lat in latencies_ns}
 
 
 def sensitivity_cores(cores=(1, 4, 8, 12), sys: MemSystem = COAXIAL_4X):
     """§6.5: speedup vs active cores; baseline at the same core count."""
-    return {n: evaluate(sys, n_active=n) for n in cores}
+    sys = _unshadow(sys)
+    sw = sweep((DDR_BASELINE, sys), n_active_grid=tuple(cores))
+    return {n: sw.comparison(sys, n_active=n) for n in cores}
 
 
 # ---------------------------------------------------------------------------
@@ -127,20 +328,25 @@ def _die_area(cores, llc_mb, ddr_ch, pcie_x8):
             ddr_ch * hw.AREA_DDR_CH + pcie_x8 * hw.AREA_PCIE_X8)
 
 
-def area_report() -> dict:
-    """Reproduces Table 2's relative-area column from Table 1's entries."""
+def area_report(designs=None) -> dict:
+    """Reproduces Table 2's relative-area column from Table 1's entries.
+
+    Derived from each registered design's own fields (LLC per core, links,
+    channels) scaled 12-core slice -> 144-core server, so registry
+    additions get Table-2 accounting for free.
+    """
     base = _die_area(FULL_CORES, FULL_CORES * 2, FULL_DDR_CHANNELS, 0)
-    rows = {
-        "ddr-baseline": (_die_area(FULL_CORES, 288, 12, 0), 12 * hw.DDR5_PINS),
-        "coaxial-5x": (_die_area(FULL_CORES, 288, 0, 60), 60 * hw.PCIE_X8_PINS),
-        "coaxial-2x": (_die_area(FULL_CORES, 288, 0, 24), 24 * hw.PCIE_X8_PINS),
-        "coaxial-4x": (_die_area(FULL_CORES, 144, 0, 48), 48 * hw.PCIE_X8_PINS),
-        "coaxial-asym": (_die_area(FULL_CORES, 144, 0, 48),
-                         48 * hw.PCIE_X8_PINS),
-    }
-    return {name: dict(rel_area=a / base, mem_pins=p,
-                       rel_pins=p / (12 * hw.DDR5_PINS))
-            for name, (a, p) in rows.items()}
+    scale = FULL_CORES // hw.SIM_CORES
+    out = {}
+    for sys in (designs if designs is not None else all_designs()):
+        llc_mb = FULL_CORES * sys.llc_mb_per_core
+        ddr_ch = 0 if sys.is_cxl else sys.dram_channels * scale
+        pcie_x8 = sys.links * scale
+        area = _die_area(FULL_CORES, llc_mb, ddr_ch, pcie_x8)
+        pins = ddr_ch * hw.DDR5_PINS + pcie_x8 * hw.PCIE_X8_PINS
+        out[sys.name] = dict(rel_area=area / base, mem_pins=pins,
+                             rel_pins=pins / (12 * hw.DDR5_PINS))
+    return out
 
 
 def pin_report() -> dict:
@@ -149,15 +355,15 @@ def pin_report() -> dict:
     # The paper's "4x" compares PCIe's *per-direction* bandwidth per pin
     # against DDR's combined-direction figure (conservative: PCIe moves the
     # same bytes in the other direction simultaneously, §2.3).
-    x8_per_pin_dir = 32.0 / hw.PCIE_X8_PINS
+    x8_per_pin_dir = hw.PCIE_X8_GBPS_PER_DIR / hw.PCIE_X8_PINS
     return dict(
         ddr5_pins=hw.DDR5_PINS,
         ddr5_peak_gbps=hw.DDR5_CH_BW_GBPS,
         ddr5_gbps_per_pin=ddr_per_pin,
         x8_pins=hw.PCIE_X8_PINS,
-        x8_peak_gbps_per_dir=32.0,
+        x8_peak_gbps_per_dir=hw.PCIE_X8_GBPS_PER_DIR,
         x8_gbps_per_pin_per_dir=x8_per_pin_dir,
-        x8_gbps_per_pin_duplex=2 * 32.0 / hw.PCIE_X8_PINS,
+        x8_gbps_per_pin_duplex=2 * hw.PCIE_X8_GBPS_PER_DIR / hw.PCIE_X8_PINS,
         bw_per_pin_ratio=x8_per_pin_dir / ddr_per_pin,
         bw_per_pin_ratio_duplex=2 * x8_per_pin_dir / ddr_per_pin,
     )
@@ -171,8 +377,12 @@ def _dimm_power(channels, util):
     return channels * (hw.DIMM_STATIC_W_PER_CH + hw.DIMM_DYN_W_PER_CH * util)
 
 
-def edp_report(sys: MemSystem = COAXIAL_4X) -> dict:
-    cmp = evaluate(sys)
+def edp_report(sys: MemSystem = COAXIAL_4X, *,
+               cmp: Comparison | None = None) -> dict:
+    """§6.6 power/EDP model.  Pass ``cmp`` (e.g. a sweep slice) to reuse an
+    already-solved comparison instead of re-evaluating."""
+    if cmp is None:
+        cmp = evaluate(sys)
     # Scale channel counts 12-core sim -> 144-core server (x12).
     scale = FULL_CORES // hw.SIM_CORES
     base_ch = DDR_BASELINE.dram_channels * scale
@@ -214,13 +424,14 @@ def edp_report(sys: MemSystem = COAXIAL_4X) -> dict:
 # ---------------------------------------------------------------------------
 
 def headline() -> dict:
-    c4 = evaluate(COAXIAL_4X)
-    c2 = evaluate(COAXIAL_2X)
-    ca = evaluate(COAXIAL_ASYM)
-    c50 = evaluate(COAXIAL_4X, iface_lat_ns=hw.CXL_LAT_PESSIMISTIC_NS)
+    """All headline numbers, sliced out of ONE batched sweep."""
+    sw = default_sweep()
+    c4 = sw.comparison(COAXIAL_4X)
+    c2 = sw.comparison(COAXIAL_2X)
+    ca = sw.comparison(COAXIAL_ASYM)
+    c50 = sw.comparison(COAXIAL_4X, iface_lat=hw.CXL_LAT_PESSIMISTIC_NS)
     fig3 = cpu_model.variance_experiment()
-    edp = edp_report()
-    cores = sensitivity_cores()
+    edp = edp_report(COAXIAL_4X, cmp=c4)
     return dict(
         gm_4x=c4.geomean_speedup,
         gm_2x=c2.geomean_speedup,
@@ -237,8 +448,8 @@ def headline() -> dict:
         stream_copy=c4.row("stream-copy"),
         fig3_geomeans=[v["geomean"] for v in fig3.values()],
         edp_ratio=edp["edp_ratio"],
-        gm_1core=sensitivity_cores((1,))[1].geomean_speedup,
-        gm_8core=cores[8].geomean_speedup,
+        gm_1core=sw.comparison(COAXIAL_4X, n_active=1).geomean_speedup,
+        gm_8core=sw.comparison(COAXIAL_4X, n_active=8).geomean_speedup,
         util_base=edp["baseline"]["util"],
         util_coax=edp["coaxial"]["util"],
     )

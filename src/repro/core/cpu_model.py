@@ -19,12 +19,22 @@ the *baseline* DDR system reproduces Table 4's IPC exactly, given the
 workload's ``exec_frac`` (non-memory CPI share).  COAXIAL designs are then
 evaluated with identical per-workload parameters -- the speedups are
 predictions of the model, not fits.
+
+Design-space batching: a :class:`MemSystem` is a frozen-dataclass façade for
+humans; the solver itself consumes :class:`MemSystemArrays`, a pytree of
+float leaves (``is_cxl`` is a 0/1 mask) that can be stacked along a leading
+design axis.  All model terms are branch-free in the design dimension
+(``jnp.where``/mask arithmetic instead of ``if sys.is_cxl``), so one jitted
+function -- :data:`_solve_jit` -- serves both the single-design
+:func:`solve` path and the vmapped designs x latencies x core-counts grid of
+:func:`solve_batch`.  A grid sweep therefore costs ONE XLA compile total,
+where the old code paid one compile per (design, core-count) pair.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +77,40 @@ class MemSystem:
     def is_cxl(self) -> bool:
         return self.links > 0
 
+    def as_arrays(self) -> "MemSystemArrays":
+        """Scalar-leaved pytree view of this design (solver calling form)."""
+        f = lambda x: jnp.asarray(float(x))
+        return MemSystemArrays(
+            dram_channels=f(self.dram_channels), links=f(self.links),
+            link_rd_gbps=f(self.link_rd_gbps),
+            link_wr_gbps=f(self.link_wr_gbps),
+            iface_lat_ns=f(self.iface_lat_ns),
+            llc_mb_per_core=f(self.llc_mb_per_core),
+            is_cxl=f(1.0 if self.is_cxl else 0.0))
+
+
+class MemSystemArrays(NamedTuple):
+    """Pytree of design-point parameters, batchable along a leading axis.
+
+    All leaves are float arrays of a common shape: ``()`` for one design,
+    ``(D,)`` for a stacked design axis.  ``is_cxl`` is a 0/1 mask so the
+    solver can stay branch-free in the design dimension.
+    """
+
+    dram_channels: jnp.ndarray
+    links: jnp.ndarray
+    link_rd_gbps: jnp.ndarray
+    link_wr_gbps: jnp.ndarray
+    iface_lat_ns: jnp.ndarray
+    llc_mb_per_core: jnp.ndarray
+    is_cxl: jnp.ndarray
+
+
+def stack_designs(designs) -> MemSystemArrays:
+    """Stack ``MemSystem`` façades into one ``(D,)``-leaved pytree."""
+    leaves = [d.as_arrays() for d in designs]
+    return MemSystemArrays(*(jnp.stack(xs) for xs in zip(*leaves)))
+
 
 def _bw_efficiency(wb):
     """Sustained/peak DDR efficiency: 70-90% depending on R/W turnaround."""
@@ -76,7 +120,12 @@ def _bw_efficiency(wb):
 
 @dataclasses.dataclass
 class ModelResult:
-    """Per-workload outputs of one (memory system x utilization) evaluation."""
+    """Per-workload outputs of one (memory system x utilization) evaluation.
+
+    Arrays are ``(n_workloads,)`` for a single design point;
+    :func:`solve_batch` returns the same structure with leading
+    ``(designs, iface_lats, core_counts)`` axes.
+    """
 
     ipc: np.ndarray
     cpi: np.ndarray
@@ -92,32 +141,42 @@ class ModelResult:
     def speedup_vs(self, base: "ModelResult") -> np.ndarray:
         return self.ipc / base.ipc
 
+    def __getitem__(self, idx) -> "ModelResult":
+        """Slice every field identically (e.g. one design from a batch)."""
+        pick = lambda x: x[idx]
+        return ModelResult(**{f.name: pick(getattr(self, f.name))
+                              for f in dataclasses.fields(self)})
 
-def _mpki_eff(wl: WorkloadArrays, sys: MemSystem, n_active: int):
-    scale = (2.0 / sys.llc_mb_per_core) ** ALPHA_LLC
+
+def _mpki_eff(wl: WorkloadArrays, sysa: MemSystemArrays, n_active):
+    scale = (2.0 / sysa.llc_mb_per_core) ** ALPHA_LLC
     streaming = wl.ws_mb >= STREAMING_WS_MB
     mpki = wl.mpki * jnp.where(streaming, 1.0, scale)
-    llc_total = sys.llc_mb_per_core * hw.SIM_CORES
+    llc_total = sysa.llc_mb_per_core * hw.SIM_CORES
     fits = (wl.ws_mb * n_active) <= llc_total
     return jnp.where(fits, wl.mpki * LLC_FIT_FACTOR, mpki)
 
 
-def _latency_terms(wl, sys: MemSystem, read_gbps, write_gbps, n_active,
-                   iface_lat_ns):
-    """Mean latency components + stdev at the given traffic level."""
+def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
+                   n_active, iface_lat_ns):
+    """Mean latency components + stdev at the given traffic level.
+
+    Branch-free in the design dimension: link terms are computed with
+    guarded denominators and zeroed by the ``is_cxl`` mask, so a DDR design
+    (links == 0) yields exactly the legacy no-link values.
+    """
     eff = _bw_efficiency(wl.wb)
     ch_bw = hw.DDR5_CH_BW_GBPS * eff
-    rho = (read_gbps + write_gbps) / (sys.dram_channels * ch_bw)
-    outstanding = n_active * MAX_MLP / sys.dram_channels
+    rho = (read_gbps + write_gbps) / (sysa.dram_channels * ch_bw)
+    outstanding = n_active * MAX_MLP / sysa.dram_channels
     w_dram = queueing.effective_queue_wait_ns(
         rho, kappa=wl.kappa, eta=wl.eta,
         outstanding_per_channel=outstanding, channel_bw_gbps=ch_bw)
-    if sys.is_cxl:
-        rho_rx = read_gbps / (sys.links * sys.link_rd_gbps)
-        svc_rx = hw.CACHE_LINE_B / sys.link_rd_gbps
-        w_link = queueing.link_queue_wait_ns(rho_rx, svc_rx, wl.kappa)
-    else:
-        w_link = jnp.zeros_like(rho)
+    link_rd_bw = jnp.maximum(sysa.links * sysa.link_rd_gbps, 1e-9)
+    rho_rx = read_gbps / link_rd_bw
+    svc_rx = hw.CACHE_LINE_B / jnp.maximum(sysa.link_rd_gbps, 1e-9)
+    w_link = sysa.is_cxl * queueing.link_queue_wait_ns(rho_rx, svc_rx,
+                                                       wl.kappa)
     queue = w_dram + w_link
     sigma = queueing.stdev_latency_ns(queue)
     latency = hw.DRAM_SERVICE_NS + queue + iface_lat_ns
@@ -129,18 +188,24 @@ def _cpi_mem(wl, mpki_eff, latency, sigma, mlp):
     return (mpki_eff / 1000.0) * l_eff_cyc / mlp
 
 
-def _cpi_bw(wl, mpki_eff, sys: MemSystem, n_active):
-    """Bandwidth-bound CPI floor for every interface in the system."""
+def _cpi_bw(wl, mpki_eff, sysa: MemSystemArrays, n_active):
+    """Bandwidth-bound CPI floor for every interface in the system.
+
+    The CXL-link floors are masked by ``is_cxl``; ``max`` with a masked 0
+    leaves the DDR-only floor untouched, so DDR designs are bit-identical
+    to the legacy branched code.
+    """
     bytes_rd = (mpki_eff / 1000.0) * hw.CACHE_LINE_B          # per inst
     bytes_wr = bytes_rd * wl.wb
     eff = _bw_efficiency(wl.wb)
     cpi = (bytes_rd + bytes_wr) * n_active * hw.CORE_CLK_GHZ / \
-        (sys.dram_channels * hw.DDR5_CH_BW_GBPS * eff)
-    if sys.is_cxl:
-        cpi = jnp.maximum(cpi, bytes_rd * n_active * hw.CORE_CLK_GHZ /
-                          (sys.links * sys.link_rd_gbps))
-        cpi = jnp.maximum(cpi, bytes_wr * n_active * hw.CORE_CLK_GHZ /
-                          (sys.links * sys.link_wr_gbps))
+        (sysa.dram_channels * hw.DDR5_CH_BW_GBPS * eff)
+    link_rd_bw = jnp.maximum(sysa.links * sysa.link_rd_gbps, 1e-9)
+    link_wr_bw = jnp.maximum(sysa.links * sysa.link_wr_gbps, 1e-9)
+    cpi = jnp.maximum(cpi, sysa.is_cxl * bytes_rd * n_active *
+                      hw.CORE_CLK_GHZ / link_rd_bw)
+    cpi = jnp.maximum(cpi, sysa.is_cxl * bytes_wr * n_active *
+                      hw.CORE_CLK_GHZ / link_wr_bw)
     return cpi
 
 
@@ -166,19 +231,12 @@ def _rho01(rho):
     return jnp.clip(rho, 0.0, 1.0)
 
 
-def calibrate(wl: WorkloadArrays, baseline: MemSystem,
-              n_active=hw.SIM_CORES):
-    """Per-workload (cpi_exec, mlp_cal) reproducing Table 4 on the baseline.
-
-    Given exec_frac, the memory-CPI budget at the table operating point is
-    (1 - exec_frac)/IPC; the effective MLP at the *baseline* utilization is
-    whatever makes the latency model meet that budget, clamped to the
-    architectural [1, MAX_MLP]; mlp_cal back-solves the load-adaptive form.
-    """
-    mpki_eff = _mpki_eff(wl, baseline, n_active)
+def _calibrate(wl: WorkloadArrays, base: MemSystemArrays, n_active):
+    """Traceable core of :func:`calibrate` (baseline as a pytree)."""
+    mpki_eff = _mpki_eff(wl, base, n_active)
     read, write = _traffic(wl, wl.ipc, mpki_eff, n_active)
     latency, _, sigma, rho_base = _latency_terms(
-        wl, baseline, read, write, n_active, baseline.iface_lat_ns)
+        wl, base, read, write, n_active, base.iface_lat_ns)
     l_eff_cyc = (latency + wl.gamma * sigma) * hw.CORE_CLK_GHZ
     budget = (1.0 - wl.exec_frac) / wl.ipc
     mlp_raw = (mpki_eff / 1000.0) * l_eff_cyc / jnp.maximum(budget, 1e-9)
@@ -190,17 +248,44 @@ def calibrate(wl: WorkloadArrays, baseline: MemSystem,
     return cpi_exec, mlp_cal
 
 
-@functools.partial(jax.jit, static_argnames=("sys", "n_active"))
-def _solve_jit(wl_arrays, cpi_exec, mlp, sys: MemSystem,
-               n_active: int, iface_lat_ns):
-    wl = wl_arrays
-    mpki_eff = _mpki_eff(wl, sys, n_active)
-    cpi_bw = _cpi_bw(wl, mpki_eff, sys, n_active)
+def calibrate(wl: WorkloadArrays, baseline, n_active=hw.SIM_CORES):
+    """Per-workload (cpi_exec, mlp_cal) reproducing Table 4 on the baseline.
+
+    Given exec_frac, the memory-CPI budget at the table operating point is
+    (1 - exec_frac)/IPC; the effective MLP at the *baseline* utilization is
+    whatever makes the latency model meet that budget, clamped to the
+    architectural [1, MAX_MLP]; mlp_cal back-solves the load-adaptive form.
+
+    ``baseline`` may be a :class:`MemSystem` façade or a
+    :class:`MemSystemArrays` pytree.
+    """
+    if isinstance(baseline, MemSystem):
+        baseline = baseline.as_arrays()
+    return _calibrate(wl, baseline, n_active)
+
+
+def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
+                 n_active, iface_override_ns):
+    """Calibrate + solve ONE design point (all workloads vectorized).
+
+    ``iface_override_ns`` replaces the CXL latency premium of CXL designs;
+    ``nan`` means "use the design's own premium".  Non-CXL designs keep
+    their (zero) premium, so a baseline sliced out of any latency grid is
+    identical to the baseline solved alone.
+    """
+    cpi_exec, mlp = _calibrate(wl, base, n_active)
+    premium = jnp.where(
+        sysa.is_cxl > 0.0,
+        jnp.where(jnp.isnan(iface_override_ns), sysa.iface_lat_ns,
+                  iface_override_ns),
+        sysa.iface_lat_ns)
+    mpki_eff = _mpki_eff(wl, sysa, n_active)
+    cpi_bw = _cpi_bw(wl, mpki_eff, sysa, n_active)
 
     def body(_, ipc):
         read, write = _traffic(wl, ipc, mpki_eff, n_active)
         latency, _, sigma, rho = _latency_terms(
-            wl, sys, read, write, n_active, iface_lat_ns)
+            wl, sysa, read, write, n_active, premium)
         mlp_eff = _mlp_eff(wl, mlp, rho)
         cpi = jnp.maximum(
             cpi_exec + _cpi_mem(wl, mpki_eff, latency, sigma, mlp_eff),
@@ -210,28 +295,97 @@ def _solve_jit(wl_arrays, cpi_exec, mlp, sys: MemSystem,
     ipc = jax.lax.fori_loop(0, FP_ITERS, body, wl.ipc)
     read, write = _traffic(wl, ipc, mpki_eff, n_active)
     latency, queue, sigma, rho = _latency_terms(
-        wl, sys, read, write, n_active, iface_lat_ns)
-    return ipc, latency, queue, sigma, rho, read, write
+        wl, sysa, read, write, n_active, premium)
+    iface = jnp.broadcast_to(premium, jnp.shape(ipc))
+    return ipc, latency, queue, sigma, rho, read, write, iface
+
+
+#: Number of times the jitted solver has been TRACED (not called).  A trace
+#: only happens on a new input shape, so a whole designs x latencies x cores
+#: grid bumps this by exactly one -- tests pin that.
+_TRACE_COUNT = [0]
+
+
+def solve_trace_count() -> int:
+    return _TRACE_COUNT[0]
+
+
+def _solve_grid(wl, sysa, base, n_active_grid, iface_grid):
+    """vmap ``_solve_point`` over designs x iface latencies x core counts.
+
+    Axis order of every output: ``(design, iface_lat, n_active, workload)``.
+    """
+    _TRACE_COUNT[0] += 1  # side effect runs at trace time only
+    f = _solve_point
+    f = jax.vmap(f, in_axes=(None, None, None, 0, None))    # core counts
+    f = jax.vmap(f, in_axes=(None, None, None, None, 0))    # iface latencies
+    f = jax.vmap(f, in_axes=(None, 0, None, None, None))    # designs
+    return f(wl, sysa, base, n_active_grid, iface_grid)
+
+
+_solve_jit = jax.jit(_solve_grid)
+
+
+def _pack_result(out, squeeze: bool) -> ModelResult:
+    ipc, latency, queue, sigma, rho, read, write, iface = out
+    to_np = lambda x: np.asarray(x, np.float64)
+    if squeeze:
+        to_np = lambda x: np.asarray(x, np.float64)[0, 0, 0]
+    ipc = to_np(ipc)
+    return ModelResult(
+        ipc=ipc, cpi=1.0 / ipc, latency_ns=to_np(latency),
+        queue_ns=to_np(queue), iface_ns=to_np(iface),
+        service_ns=np.full_like(ipc, hw.DRAM_SERVICE_NS),
+        sigma_ns=to_np(sigma), rho=to_np(rho), read_gbps=to_np(read),
+        write_gbps=to_np(write))
+
+
+def _grid(values) -> jnp.ndarray:
+    return jnp.asarray([float('nan') if v is None else float(v)
+                        for v in values])
 
 
 def solve(sys: MemSystem, *, baseline: MemSystem | None = None,
           n_active: int = hw.SIM_CORES, iface_lat_ns: float | None = None,
           workloads=WORKLOADS) -> ModelResult:
-    """Evaluate all workloads on ``sys`` (calibrated against ``baseline``)."""
+    """Evaluate all workloads on ``sys`` (calibrated against ``baseline``).
+
+    Thin wrapper over the batched solver with 1-sized grids: every single-
+    design call, for ANY design / core count / latency premium, shares one
+    XLA compilation.
+    """
     wl = _to_jnp(as_arrays(workloads))
-    base = baseline or DDR_BASELINE
-    cpi_exec, mlp = calibrate(wl, base, n_active=n_active)
-    lat_premium = sys.iface_lat_ns if iface_lat_ns is None else iface_lat_ns
-    ipc, latency, queue, sigma, rho, read, write = _solve_jit(
-        wl, cpi_exec, mlp, sys, int(n_active), float(lat_premium))
-    to_np = lambda x: np.asarray(x, np.float64)
-    return ModelResult(
-        ipc=to_np(ipc), cpi=to_np(1.0 / ipc), latency_ns=to_np(latency),
-        queue_ns=to_np(queue),
-        iface_ns=np.full(len(wl.ipc), float(lat_premium)),
-        service_ns=np.full(len(wl.ipc), hw.DRAM_SERVICE_NS),
-        sigma_ns=to_np(sigma), rho=to_np(rho), read_gbps=to_np(read),
-        write_gbps=to_np(write))
+    base = (baseline or DDR_BASELINE).as_arrays()
+    sysa = stack_designs([sys])
+    if iface_lat_ns is not None:
+        # Legacy solve() applied an explicit override even to non-CXL
+        # designs; mirroring the field keeps that behaviour under the mask.
+        sysa = sysa._replace(
+            iface_lat_ns=jnp.full_like(sysa.iface_lat_ns,
+                                       float(iface_lat_ns)))
+    out = _solve_jit(wl, sysa, base, _grid([n_active]), _grid([iface_lat_ns]))
+    return _pack_result(out, squeeze=True)
+
+
+def solve_batch(designs, *, n_active_grid=(hw.SIM_CORES,),
+                iface_lat_grid=(None,), baseline: MemSystem | None = None,
+                workloads=WORKLOADS) -> ModelResult:
+    """Evaluate a designs x iface-latencies x core-counts grid in ONE jit.
+
+    ``iface_lat_grid`` entries override the CXL latency premium; ``None``
+    means "each design's own premium".  Non-CXL designs ignore the override
+    (their premium stays 0), so the DDR baseline column of the grid equals
+    the standalone baseline bit-for-bit.
+
+    Returns a :class:`ModelResult` whose arrays have shape
+    ``(len(designs), len(iface_lat_grid), len(n_active_grid), n_workloads)``.
+    """
+    wl = _to_jnp(as_arrays(workloads))
+    base = (baseline or DDR_BASELINE).as_arrays()
+    sysa = stack_designs(tuple(designs))
+    out = _solve_jit(wl, sysa, base, _grid(n_active_grid),
+                     _grid(iface_lat_grid))
+    return _pack_result(out, squeeze=False)
 
 
 def _to_jnp(wl: WorkloadArrays) -> WorkloadArrays:

@@ -36,6 +36,9 @@ MAX_MLP = 16.0
 DDR5_PINS = 160
 PCIE_PINS_PER_LANE = 4
 PCIE_X8_PINS = 8 * PCIE_PINS_PER_LANE  # 32
+#: PCIe 5.0 x8 peak bandwidth PER DIRECTION, GB/s (paper §2.3: the 4x
+#: bandwidth-per-pin argument uses this against DDR's combined figure).
+PCIE_X8_GBPS_PER_DIR = 32.0
 
 #: Relative silicon area at TSMC 7nm (paper Table 1, rel. to 1MB L3).
 AREA_L3_PER_MB = 1.0

@@ -51,11 +51,10 @@ def _triad_kernel(alpha_ref, a_ref, b_ref, o_ref):
 def _call(kernel, arrays, scalars=(), interpret=False):
     shape = arrays[0].shape
     grid, in_specs, out_spec = _grid_spec(shape, len(arrays))
-    scalar_specs = [pl.BlockSpec(memory_space=pl.ANY)] * 0
     if scalars:
-        # scalars ride along as (1,)-shaped SMEM-ish inputs
-        in_specs = [pl.BlockSpec((1,), lambda i, j: (0,))] * len(scalars) \
-            + in_specs
+        # Scalars ride along as (1,)-shaped inputs broadcast to every tile.
+        scalar_spec = pl.BlockSpec((1,), lambda i, j: (0,))
+        in_specs = [scalar_spec] * len(scalars) + in_specs
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -2,6 +2,8 @@
 queueing argument -- loaded systems want channels, unloaded want locality."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import memsim, planner

@@ -1,0 +1,203 @@
+"""Design-space sweep engine: batch/single equivalence, registry, compile
+count.  These pin the refactor's contract: the vmapped grid is numerically
+the same model as the per-design path, and a whole grid costs ONE trace of
+the jitted solver.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import coaxial, cpu_model, hw
+from repro.core.cpu_model import (COAXIAL_4X, DDR_BASELINE, DESIGNS,
+                                  MemSystem, solve, solve_batch,
+                                  solve_trace_count, stack_designs)
+
+LAT_GRID = (None, hw.CXL_LAT_PESSIMISTIC_NS)
+CORE_GRID = (1, 8, hw.SIM_CORES)
+
+
+class TestBatchMatchesSingle:
+    @pytest.fixture(scope="class")
+    def batch(self):
+        return solve_batch(DESIGNS, n_active_grid=CORE_GRID,
+                           iface_lat_grid=LAT_GRID)
+
+    def test_shapes(self, batch):
+        assert batch.ipc.shape == (len(DESIGNS), len(LAT_GRID),
+                                   len(CORE_GRID), 35)
+
+    @pytest.mark.parametrize("di", range(len(DESIGNS)))
+    def test_elementwise_vs_solve(self, batch, di):
+        sys = DESIGNS[di]
+        for j, lat in enumerate(LAT_GRID):
+            for k, n in enumerate(CORE_GRID):
+                # None / non-CXL designs keep their own premium in the grid.
+                override = lat if sys.is_cxl else None
+                ref = solve(sys, n_active=n, iface_lat_ns=override)
+                got = batch[di, j, k]
+                for field in ("ipc", "latency_ns", "queue_ns", "sigma_ns",
+                              "rho", "read_gbps", "write_gbps", "iface_ns"):
+                    np.testing.assert_allclose(
+                        getattr(got, field), getattr(ref, field),
+                        rtol=1e-6, atol=1e-9,
+                        err_msg=f"{sys.name} lat={lat} n={n} {field}")
+
+    def test_baseline_column_ignores_latency_override(self, batch):
+        b = [d.name for d in DESIGNS].index(DDR_BASELINE.name)
+        np.testing.assert_array_equal(batch.ipc[b, 0], batch.ipc[b, 1])
+        assert np.all(batch.iface_ns[b] == 0.0)
+
+    def test_geomean_speedups_match_headline_path(self, batch):
+        """4x / 2x / asym geomeans from the grid == evaluate()'s."""
+        names = [d.name for d in DESIGNS]
+        b = names.index(DDR_BASELINE.name)
+        k = CORE_GRID.index(hw.SIM_CORES)
+        for dname in ("coaxial-2x", "coaxial-4x", "coaxial-asym"):
+            i = names.index(dname)
+            gm_grid = cpu_model.geomean(batch.ipc[i, 0, k] /
+                                        batch.ipc[b, 0, k])
+            gm_eval = coaxial.evaluate(
+                coaxial.get_design(dname)).geomean_speedup
+            assert gm_grid == pytest.approx(gm_eval, rel=1e-6)
+
+
+class TestCompileCount:
+    def test_one_trace_per_grid_shape(self):
+        # A shape not used anywhere else in the suite forces a fresh trace.
+        grid = dict(n_active_grid=(2, 5, 7), iface_lat_grid=(11.0, 22.0))
+        before = solve_trace_count()
+        solve_batch(DESIGNS[:3], **grid)
+        assert solve_trace_count() == before + 1
+        # Same-shaped sweep: cache hit, zero new traces -- even with
+        # different designs and grid values.
+        solve_batch(DESIGNS[2:], **grid)
+        solve_batch(DESIGNS[:3], n_active_grid=(1, 3, 12),
+                    iface_lat_grid=(None, 40.0))
+        assert solve_trace_count() == before + 1
+
+    def test_single_solves_share_one_trace(self):
+        solve(COAXIAL_4X)  # prime the (1,1,1) shape
+        before = solve_trace_count()
+        solve(DDR_BASELINE)
+        solve(COAXIAL_4X, n_active=3, iface_lat_ns=42.0)
+        solve(DESIGNS[3], n_active=9)
+        assert solve_trace_count() == before
+
+
+class TestSweepApi:
+    @pytest.fixture(scope="class")
+    def sw(self):
+        return coaxial.sweep((DDR_BASELINE, COAXIAL_4X),
+                             iface_lat_grid=LAT_GRID,
+                             n_active_grid=CORE_GRID)
+
+    def test_comparison_matches_evaluate(self, sw):
+        for n in CORE_GRID:
+            got = sw.comparison(COAXIAL_4X, n_active=n)
+            ref = coaxial.evaluate(COAXIAL_4X, n_active=n)
+            np.testing.assert_allclose(got.speedup, ref.speedup, rtol=1e-6)
+
+    def test_latency_column_matches_evaluate(self, sw):
+        got = sw.comparison(COAXIAL_4X, iface_lat=hw.CXL_LAT_PESSIMISTIC_NS)
+        ref = coaxial.evaluate(COAXIAL_4X,
+                               iface_lat_ns=hw.CXL_LAT_PESSIMISTIC_NS)
+        np.testing.assert_allclose(got.speedup, ref.speedup, rtol=1e-6)
+
+    def test_default_premium_aliases_explicit_30ns(self, sw):
+        a = sw.comparison(COAXIAL_4X, iface_lat=None)
+        b = sw.comparison(COAXIAL_4X, iface_lat=hw.CXL_LAT_NS)
+        np.testing.assert_array_equal(a.speedup, b.speedup)
+
+    def test_baseline_always_present(self):
+        sw = coaxial.sweep((COAXIAL_4X,))
+        assert sw.designs[0].name == DDR_BASELINE.name
+        assert sw.comparison(COAXIAL_4X).geomean_speedup > 1.3
+
+    def test_evaluate_applies_override_to_non_cxl(self):
+        """Legacy contract: an explicit premium penalizes ANY design --
+        the grid's is_cxl masking must not swallow it in evaluate()."""
+        cmp = coaxial.evaluate(DDR_BASELINE, iface_lat_ns=50.0)
+        assert cmp.sys.name == DDR_BASELINE.name
+        ref = solve(DDR_BASELINE, iface_lat_ns=50.0)
+        base = solve(DDR_BASELINE)
+        np.testing.assert_allclose(cmp.speedup, ref.ipc / base.ipc,
+                                   rtol=1e-6)
+        assert cmp.geomean_speedup < 0.95
+
+    def test_sensitivity_latency_non_cxl(self):
+        out = coaxial.sensitivity_latency((30.0, 50.0), sys=DDR_BASELINE)
+        assert out[50.0].geomean_speedup < out[30.0].geomean_speedup < 1.0
+
+    def test_evaluate_modified_design_with_baseline_name(self):
+        """A tweaked design still named 'ddr-baseline' must not shadow the
+        comparator (legacy evaluate() solved it directly)."""
+        import dataclasses
+        ddr2 = dataclasses.replace(DDR_BASELINE, dram_channels=2)
+        cmp = coaxial.evaluate(ddr2)
+        ref = solve(ddr2)
+        base = solve(DDR_BASELINE)
+        np.testing.assert_allclose(cmp.speedup, ref.ipc / base.ipc,
+                                   rtol=1e-6)
+        assert cmp.geomean_speedup > 1.05
+        sc = coaxial.sensitivity_cores((1, 12), sys=ddr2)
+        assert sc[12].geomean_speedup == pytest.approx(
+            cmp.geomean_speedup, rel=1e-6)
+
+    def test_sweep_rejects_conflicting_same_name_designs(self):
+        import dataclasses
+        ddr2 = dataclasses.replace(DDR_BASELINE, dram_channels=2)
+        with pytest.raises(ValueError, match="named"):
+            coaxial.sweep((DDR_BASELINE, ddr2))
+
+    def test_geomean_grid_baseline_row_is_one(self, sw):
+        gm = sw.geomean_grid()
+        b = sw.design_index(DDR_BASELINE.name)
+        np.testing.assert_allclose(gm[b], 1.0, rtol=1e-6)
+
+
+class TestRegistry:
+    def test_seed_designs_registered(self):
+        names = [d.name for d in coaxial.all_designs()]
+        for d in DESIGNS:
+            assert d.name in names
+
+    def test_round_trip(self):
+        custom = MemSystem(
+            "test-cxl-3x", dram_channels=3, links=3,
+            link_rd_gbps=hw.CXL_X8_RD_GBPS, link_wr_gbps=hw.CXL_X8_WR_GBPS,
+            iface_lat_ns=hw.CXL_LAT_NS, llc_mb_per_core=1.5)
+        coaxial.register_design(custom)
+        try:
+            assert coaxial.get_design("test-cxl-3x") is custom
+            assert custom in coaxial.all_designs()
+            # Registered points flow into default sweeps and Table 2.
+            sw = coaxial.sweep(n_active_grid=(hw.SIM_CORES,))
+            gm = sw.comparison(custom).geomean_speedup
+            assert 1.0 < gm < sw.comparison("coaxial-4x").geomean_speedup
+            assert "test-cxl-3x" in coaxial.area_report()
+        finally:
+            coaxial.unregister_design("test-cxl-3x")
+        assert "test-cxl-3x" not in [d.name for d in coaxial.all_designs()]
+
+    def test_duplicate_rejected(self):
+        with pytest.raises(ValueError):
+            coaxial.register_design(COAXIAL_4X)
+
+    def test_unknown_design(self):
+        with pytest.raises(KeyError):
+            coaxial.get_design("no-such-design")
+
+
+class TestPytree:
+    def test_stack_designs_leading_axis(self):
+        sysa = stack_designs(DESIGNS)
+        assert sysa.dram_channels.shape == (len(DESIGNS),)
+        np.testing.assert_array_equal(
+            np.asarray(sysa.is_cxl),
+            [0.0 if d.name == DDR_BASELINE.name else 1.0 for d in DESIGNS])
+
+    def test_as_arrays_round_trip_values(self):
+        a = COAXIAL_4X.as_arrays()
+        assert float(a.dram_channels) == COAXIAL_4X.dram_channels
+        assert float(a.iface_lat_ns) == COAXIAL_4X.iface_lat_ns
+        assert float(a.is_cxl) == 1.0
