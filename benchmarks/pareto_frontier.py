@@ -1,0 +1,81 @@
+"""Channels x LLC Pareto frontier: area cost vs geomean speedup.
+
+A named-axis sweep over (baseline + CXL channel-count designs) x LLC
+capacities -- every cell solved in one jitted pass -- reduced to the
+non-dominated ``rel_area`` vs geomean-speedup frontier, plus its knee
+point (max perpendicular distance from the chord between the frontier's
+endpoints: the "buy this one" design).
+
+The LLC axis overrides ``llc_mb_per_core`` for every design in the grid,
+so each cell's area accounting moves with it (design_cost_grid) -- the
+frontier trades real silicon against real speedup.
+"""
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import coaxial, cpu_model, hw
+
+CHANNELS = range(1, 9)
+LLC_MB_PER_CORE = (0.5, 1.0, 2.0, 4.0)
+
+
+def frontier_sweep() -> "coaxial.SweepResult":
+    """The shared channels x LLC grid (also rendered by benchmarks.report)."""
+    designs = [cpu_model.DDR_BASELINE] + [
+        cpu_model.MemSystem(
+            f"pareto-cxl-{ch}x", dram_channels=ch, links=ch,
+            link_rd_gbps=hw.CXL_X8_RD_GBPS, link_wr_gbps=hw.CXL_X8_WR_GBPS,
+            iface_lat_ns=hw.CXL_LAT_NS, llc_mb_per_core=1.0)
+        for ch in CHANNELS
+    ]
+    spec = coaxial.sweep_spec(design=designs,
+                              llc_mb_per_core=LLC_MB_PER_CORE)
+    return coaxial.solve_spec(spec)
+
+
+def knee_point(frontier, *, cost: str = "rel_area") -> dict:
+    """Frontier point farthest (perpendicular) from the endpoint chord."""
+    if len(frontier) <= 2:
+        return frontier[-1]
+    xy = np.array([[p[cost], p["geomean_speedup"]] for p in frontier])
+    a, b = xy[0], xy[-1]
+    chord = b - a
+    chord = chord / np.linalg.norm(chord)
+    rel = xy - a
+    dist = np.abs(rel[:, 0] * chord[1] - rel[:, 1] * chord[0])
+    return frontier[int(np.argmax(dist))]
+
+
+def main():
+    us, sw = time_call(frontier_sweep, warmup=0, iters=1)
+    front = sw.pareto(cost="rel_area")
+    knee = knee_point(front)
+    n_cells = int(np.prod(sw.shape))
+    emit("pareto.cells", us, n_cells)
+    emit("pareto.frontier_size", 0.0, len(front))
+    best = front[-1]
+    emit("pareto.best", 0.0,
+         f"{best['design']}@{best['llc_mb_per_core']:g}MB="
+         f"{best['geomean_speedup']:.3f}x/{best['rel_area']:.3f}area")
+    emit("pareto.knee", 0.0,
+         f"{knee['design']}@{knee['llc_mb_per_core']:g}MB="
+         f"{knee['geomean_speedup']:.3f}x/{knee['rel_area']:.3f}area")
+
+    # Which way should the knee design move?  The same differentiable
+    # model, queried with jax.grad through the fixed point.
+    knee_sys = dataclasses.replace(
+        next(d for d in sw.designs if d.name == knee["design"]),
+        llc_mb_per_core=knee["llc_mb_per_core"])
+    us_g, g = time_call(
+        lambda: coaxial.design_gradient(
+            knee_sys, ("dram_channels", "llc_mb_per_core", "iface_lat_ns")),
+        warmup=0, iters=1)
+    emit("pareto.knee_gradient", us_g,
+         ";".join(f"d_{k}={v:+.4f}" for k, v in g.items()))
+
+
+if __name__ == "__main__":
+    main()

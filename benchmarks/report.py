@@ -114,11 +114,31 @@ def coaxial_table() -> str:
     return "\n".join(lines)
 
 
+def pareto_table() -> str:
+    """The channels x LLC area-vs-speedup frontier (named-axis sweep),
+    knee point flagged -- the design the frontier says to buy."""
+    from benchmarks.pareto_frontier import frontier_sweep, knee_point
+    sw = frontier_sweep()
+    front = sw.pareto(cost="rel_area")
+    knee = knee_point(front)
+    lines = ["| design | llc MB/core | rel area | rel pins | geomean "
+             "speedup | |",
+             "|---|---|---|---|---|---|"]
+    for p in front:
+        mark = "knee" if p is knee else ""
+        lines.append(
+            f"| {p['design']} | {p['llc_mb_per_core']:g} | "
+            f"{p['rel_area']:.3f} | {p['rel_pins']:.3f} | "
+            f"{p['geomean_speedup']:.3f} | {mark} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "coaxial"])
+                    choices=["all", "dryrun", "roofline", "coaxial",
+                             "pareto"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
     args = ap.parse_args()
@@ -136,6 +156,10 @@ def main():
     if args.section in ("all", "coaxial"):
         print("### Coaxial design-space sweep\n")
         print(coaxial_table())
+        print()
+    if args.section in ("all", "pareto"):
+        print("### Channels x LLC Pareto frontier\n")
+        print(pareto_table())
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.table2_designs",
     "benchmarks.table5_edp",
     "benchmarks.sweep_grid",
+    "benchmarks.pareto_frontier",
     "benchmarks.stream_kernels",
     "benchmarks.channelized_decode",
     "benchmarks.roofline",

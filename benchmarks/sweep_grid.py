@@ -1,9 +1,9 @@
 """Dense design-space grid: the batched sweep engine vs a per-point loop.
 
-Sweeps (baseline + 10 channel counts) x 10 CXL latency premiums (110 grid
-points, all 35 workloads each = 3850 model solutions) in ONE jitted,
-vmapped call, then times the same grid as a Python loop of single-point
-``solve()`` calls.
+Declares a named-axis spec -- (baseline + 10 channel counts) x 10 CXL
+latency premiums (110 grid points, all 35 workloads each = 3850 model
+solutions) -- and solves it in ONE jitted, vmapped call, then times the
+same grid as a Python loop of single-point ``solve()`` calls.
 The loop already shares the sweep engine's single-point compilation (the
 old code recompiled per design), so the remaining gap is pure dispatch /
 fixed-point batching -- the sweep's advantage grows with grid size.
@@ -30,18 +30,18 @@ def _grid_designs():
 
 def main():
     # Baseline included explicitly so the batched grid and the per-point
-    # loop solve the SAME point set (sweep() would prepend it anyway).
+    # loop solve the SAME point set (solve_spec would prepend it anyway).
     designs = [cpu_model.DDR_BASELINE] + _grid_designs()
+    spec = coaxial.sweep_spec(design=designs, iface_lat_ns=LATENCIES)
     n_points = len(designs) * len(LATENCIES)
 
     # Both sides timed compile-warm (warmup=1 pays each path's XLA trace),
     # so the ratio is pure steady-state dispatch + batching.
     t0 = cpu_model.solve_trace_count()
-    us_batch, sw = time_call(
-        lambda: coaxial.sweep(designs, iface_lat_grid=LATENCIES),
-        warmup=1, iters=1)
+    us_batch, sw = time_call(lambda: coaxial.solve_spec(spec),
+                             warmup=1, iters=1)
     traces = cpu_model.solve_trace_count() - t0
-    assert len(sw.designs) == len(designs)
+    assert sw.shape == (len(designs), len(LATENCIES))
 
     def loop():
         return [cpu_model.solve(d, iface_lat_ns=lat if d.is_cxl else None)
@@ -49,7 +49,7 @@ def main():
 
     us_loop, _ = time_call(loop, warmup=1, iters=1)
 
-    gm = sw.geomean_grid()          # (D, L, 1) incl. prepended baseline
+    gm = sw.geomean_grid()          # (D, L) incl. prepended baseline
     best = np.unravel_index(np.argmax(gm), gm.shape)
     emit("sweep_grid.points", 0.0, n_points)
     emit("sweep_grid.batched_us", us_batch, f"{us_batch / n_points:.0f}")

@@ -43,6 +43,22 @@ def main():
     print(f"lbm: {lbm['base_latency_ns']:.0f}ns -> {lbm['latency_ns']:.0f}ns, "
           f"speedup {lbm['speedup']:.2f}x (paper: ~3x, queuing-dominated)")
 
+    # Beyond the paper: a named-axis sweep (every design x LLC capacities,
+    # one XLA trace) reduced to its area/speedup Pareto frontier, and the
+    # gradient of the same differentiable model at COAXIAL-4x.
+    spec = coaxial.sweep_spec(design=coaxial.all_designs(),
+                              llc_mb_per_core=(0.5, 1.0, 2.0, 4.0))
+    front = coaxial.solve_spec(spec).pareto(cost="rel_area")
+    best = front[-1]
+    print(f"\npareto frontier (designs x LLC, {len(front)} points): best "
+          f"{best['design']}@{best['llc_mb_per_core']:g}MB/core = "
+          f"{best['geomean_speedup']:.2f}x at {best['rel_area']:.2f}x area")
+    g = coaxial.design_gradient(
+        coaxial.COAXIAL_4X, ("dram_channels", "llc_mb_per_core",
+                             "iface_lat_ns"))
+    print("d(geomean speedup)/d(field) at coaxial-4x: " +
+          ", ".join(f"{k}={v:+.4f}" for k, v in g.items()))
+
     plan = planner.plan_decode_kv(
         kv_bytes=8 * 32768 * 8 * 128 * 2 * 2 * 88,   # mistral-large decode
         qkv_flops=4 * 88 * 8 * 32768 * 96 * 128,

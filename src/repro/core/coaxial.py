@@ -14,10 +14,23 @@ Everything the paper reports is derivable from here:
     (Table 5);
   * :func:`sensitivity_latency` / :func:`sensitivity_cores` -- §6.4 / §6.5.
 
-The sweep engine is what makes dense grids cheap: ``sweep()`` stacks the
-design points into a :class:`~repro.core.cpu_model.MemSystemArrays` pytree
-and calls the vmapped solver once, so a 100-point channels x latency grid
-costs one XLA compile instead of 100.
+The sweep engine is what makes dense grids cheap: a sweep lowers to ONE
+flattened, vmapped solver call, so a 100-point channels x latency grid
+costs one XLA compile instead of 100.  Sweeps are declared as a
+:func:`sweep_spec` of named axes -- the design axis, ``iface_lat_ns``,
+``n_active``, any design field (``llc_mb_per_core``, ``dram_channels``,
+...) or any workload parameter (``kappa``, ``mpki``, ...)::
+
+    sw = coaxial.solve_spec(coaxial.sweep_spec(
+        design=coaxial.all_designs(), iface_lat_ns=[None, 50.0],
+        llc_mb_per_core=np.linspace(0.5, 4, 8), kappa=[1.0, 1.6, 3.2]))
+    sw.sel(design="coaxial-4x", kappa=1.6).geomean_grid()
+    sw.pareto()                      # area/pins vs speedup frontier
+
+:func:`sweep` / :func:`default_sweep` / :func:`evaluate` are thin shims
+over the spec path (bit-identical to the historical positional grid), and
+:func:`design_gradient` differentiates the same solve for gradient-based
+design optimization.
 """
 
 from __future__ import annotations
@@ -30,15 +43,19 @@ import numpy as np
 from repro.core import cpu_model, hw
 from repro.core.cpu_model import (COAXIAL_2X, COAXIAL_4X, COAXIAL_5X,
                                   COAXIAL_ASYM, DDR_BASELINE, DESIGNS,
-                                  MemSystem, ModelResult, geomean, solve,
-                                  solve_batch)
+                                  MemSystem, ModelResult, design_gradient,
+                                  geomean, solve, solve_batch)
+from repro.core.sweepspec import (KIND_DESIGN, KIND_IFACE, KIND_N_ACTIVE,
+                                  KIND_WORKLOAD_FIELD, Axis, SweepSpec,
+                                  build_flat, sweep_spec)
 from repro.core.workloads import NAMES, WORKLOADS
 
 __all__ = [
     "COAXIAL_2X", "COAXIAL_4X", "COAXIAL_5X", "COAXIAL_ASYM", "DDR_BASELINE",
     "DESIGNS", "MemSystem", "evaluate", "Comparison", "SweepResult", "sweep",
+    "Axis", "SweepSpec", "sweep_spec", "solve_spec", "design_gradient",
     "default_sweep", "register_design", "unregister_design", "get_design",
-    "all_designs", "area_report", "pin_report", "edp_report",
+    "all_designs", "area_report", "pin_report", "design_cost", "edp_report",
     "sensitivity_latency", "sensitivity_cores",
 ]
 
@@ -102,7 +119,7 @@ class Comparison:
 
     @property
     def geomean_speedup(self) -> float:
-        return geomean(self.speedup)
+        return geomean(self.speedup, self.names)
 
     @property
     def n_above_2x(self) -> int:
@@ -154,85 +171,332 @@ class Comparison:
 # The sweep engine.
 # ---------------------------------------------------------------------------
 
+_UNSET = object()
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Stacked model results over a designs x latencies x cores grid.
+    """Stacked model results over a grid of named axes.
 
-    ``results`` arrays have shape ``(D, L, C, n_workloads)`` matching
-    ``designs`` / ``iface_lats`` / ``cores``.  Individual
+    ``results`` arrays have shape ``spec shape + (n_workloads,)``; the
+    axes (in grid order) name each dimension.  Individual
     :class:`ModelResult` slices and baseline :class:`Comparison` objects
     are views into the one batched solve -- no further compilation or
-    fixed-point iteration happens after construction.
+    fixed-point iteration happens after construction.  Cells are selected
+    by coordinate, never by position: ``sw.sel(design="coaxial-4x",
+    kappa=1.6)``, with numeric coordinates matched tolerantly
+    (``iface_lat_ns=50`` and ``50.0`` resolve identically).
     """
 
-    designs: tuple[MemSystem, ...]
-    iface_lats: tuple           # entries: float override or None (= default)
-    cores: tuple[int, ...]
+    axes: tuple[Axis, ...]
     names: tuple[str, ...]
     results: ModelResult
     baseline_name: str = DDR_BASELINE.name
+    workloads: tuple = WORKLOADS
+    baseline_sys: MemSystem = DDR_BASELINE
+    #: Length-1 axes recording the coordinates :meth:`sel` pinned, so the
+    #: baseline reference and cost accounting keep honouring them.
+    pinned: tuple[Axis, ...] = ()
+
+    # -- axis plumbing ----------------------------------------------------
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(ax) for ax in self.axes)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(ax.name for ax in self.axes)
+
+    def _axis_pos(self, name: str) -> int:
+        for p, ax in enumerate(self.axes):
+            if ax.name == name:
+                return p
+        raise KeyError(f"no axis {name!r} in sweep; axes: "
+                       f"{list(self.axis_names)}")
+
+    def axis(self, name: str) -> Axis:
+        return self.axes[self._axis_pos(name)]
+
+    # -- legacy positional views (the historical D/L/C triple) ------------
+
+    @property
+    def designs(self) -> tuple[MemSystem, ...]:
+        return self.axis("design").values
+
+    @property
+    def iface_lats(self) -> tuple:
+        return self.axis("iface_lat_ns").values
+
+    @property
+    def cores(self) -> tuple[int, ...]:
+        return tuple(int(v) for v in self.axis("n_active").values)
 
     def design_index(self, sys) -> int:
-        name = sys.name if isinstance(sys, MemSystem) else sys
-        for i, d in enumerate(self.designs):
-            if d.name == name:
-                return i
-        raise KeyError(f"design {name!r} not in sweep "
-                       f"{[d.name for d in self.designs]}")
+        return self.axis("design").index(sys)
 
-    def _lat_index(self, sys, iface_lat) -> int:
-        if iface_lat in self.iface_lats:
-            return self.iface_lats.index(iface_lat)
-        # A design's own premium and an equal explicit override are the
-        # same grid column for that design (the solver masks per-design).
-        d = self.designs[self.design_index(sys)]
-        if iface_lat is None and d.iface_lat_ns in self.iface_lats:
-            return self.iface_lats.index(d.iface_lat_ns)
-        if iface_lat == d.iface_lat_ns and None in self.iface_lats:
-            return self.iface_lats.index(None)
-        raise KeyError(f"iface_lat {iface_lat!r} not in sweep grid "
-                       f"{self.iface_lats}")
+    # -- coordinate resolution --------------------------------------------
 
-    def _indices(self, sys, iface_lat, n_active) -> tuple[int, int, int]:
-        return (self.design_index(sys), self._lat_index(sys, iface_lat),
-                self.cores.index(n_active))
+    def _coord_index(self, ax: Axis, value, design=None) -> int:
+        """Axis lookup + the iface aliasing rule: for a given design, its
+        own premium and an equal explicit override are the same column
+        (the solver's NaN mask makes them identical)."""
+        try:
+            return ax.index(value)
+        except KeyError as err:
+            if ax.kind == KIND_IFACE and design is not None:
+                if value is None:
+                    try:
+                        return ax.index(design.iface_lat_ns)
+                    except KeyError:
+                        pass
+                else:
+                    try:
+                        aliases = np.isclose(float(value),
+                                             design.iface_lat_ns,
+                                             rtol=1e-6, atol=1e-12)
+                    except (TypeError, ValueError):
+                        aliases = False
+                    if aliases:
+                        try:
+                            return ax.index(None)
+                        except KeyError:
+                            pass
+            raise err
 
-    def result(self, sys, *, iface_lat=None,
-               n_active: int = hw.SIM_CORES) -> ModelResult:
-        """The ``(n_workloads,)`` ModelResult slice for one grid point."""
-        return self.results[self._indices(sys, iface_lat, n_active)]
+    def _design_ctx(self, coords):
+        """Validate coordinate names; resolve the design the coordinates
+        address (the iface-aliasing context), if any."""
+        for k in coords:
+            if k not in self.axis_names:
+                raise KeyError(f"no axis {k!r} in sweep; axes: "
+                               f"{list(self.axis_names)}")
+        if "design" in coords:
+            dax = self.axis("design")
+            return dax.values[dax.index(coords["design"])]
+        return None
 
-    def comparison(self, sys, *, iface_lat=None,
-                   n_active: int = hw.SIM_CORES) -> Comparison:
-        """``sys`` vs the DDR baseline at the same core count.
+    def indices(self, **coords) -> tuple[int, ...]:
+        """Full grid index from named coordinates.
 
-        The baseline ignores the latency override (it has no CXL
-        interface), so any latency column serves as its reference.
+        Axes of length 1 may be omitted; any longer axis must be pinned.
         """
-        i, j, k = self._indices(sys, iface_lat, n_active)
-        b = self.design_index(self.baseline_name)
-        return Comparison(sys=self.designs[i], base=self.results[b, j, k],
-                          res=self.results[i, j, k], names=self.names)
+        design = self._design_ctx(coords)
+        out = []
+        for ax in self.axes:
+            if ax.name in coords:
+                out.append(self._coord_index(ax, coords[ax.name], design))
+            elif len(ax) == 1:
+                out.append(0)
+            else:
+                raise KeyError(
+                    f"axis {ax.name!r} has {len(ax)} coordinates; pass "
+                    f"{ax.name}=<one of {list(ax.coords)}>")
+        return tuple(out)
+
+    def sel(self, **coords) -> "SweepResult":
+        """Select coordinates by axis name; each selected axis is dropped.
+
+        ``sw.sel(design="coaxial-4x", kappa=1.6)`` replaces the historical
+        positional index triple.  Partial selection returns a reduced
+        sweep over the remaining axes; the selected coordinates stay
+        pinned, so :meth:`speedup_grid` / :meth:`pareto` keep comparing
+        and costing the reduced grid at those coordinates.
+        """
+        design = self._design_ctx(coords)
+        res = self.results
+        kept: list[Axis] = []
+        pins: list[Axis] = []
+        pos = 0
+        for ax in self.axes:
+            if ax.name in coords:
+                i = self._coord_index(ax, coords[ax.name], design)
+                res = res[(slice(None),) * pos + (i,)]
+                pins.append(Axis(ax.name, (ax.values[i],), ax.kind))
+            else:
+                kept.append(ax)
+                pos += 1
+        return dataclasses.replace(self, axes=tuple(kept), results=res,
+                                   pinned=self.pinned + tuple(pins))
+
+    def _legacy_coords(self, sys, iface_lat, n_active, coords) -> dict:
+        coords = dict(coords)
+        if sys is not None:
+            coords.setdefault("design", sys)
+        if iface_lat is not _UNSET:
+            coords["iface_lat_ns"] = iface_lat
+        elif "iface_lat_ns" in self.axis_names:
+            coords.setdefault("iface_lat_ns", None)
+        if n_active is not _UNSET:
+            coords["n_active"] = n_active
+        elif "n_active" in self.axis_names:
+            coords.setdefault("n_active", hw.SIM_CORES)
+        return coords
+
+    def result(self, sys=None, *, iface_lat=_UNSET, n_active=_UNSET,
+               **coords) -> ModelResult:
+        """The ``(n_workloads,)`` ModelResult slice for one grid point."""
+        coords = self._legacy_coords(sys, iface_lat, n_active, coords)
+        return self.results[self.indices(**coords)]
+
+    def comparison(self, sys, *, iface_lat=_UNSET, n_active=_UNSET,
+                   **coords) -> Comparison:
+        """``sys`` vs the DDR baseline at the same grid coordinates.
+
+        The baseline is sliced from the same non-design cell as ``sys``
+        (it ignores the latency override -- no CXL interface -- so any
+        latency column serves as its reference).
+        """
+        coords = self._legacy_coords(sys, iface_lat, n_active, coords)
+        idx = self.indices(**coords)
+        p = self._axis_pos("design")
+        bidx = idx[:p] + (self.design_index(self.baseline_name),) + idx[p + 1:]
+        return Comparison(sys=self.axis("design").values[idx[p]],
+                          base=self.results[bidx], res=self.results[idx],
+                          names=self.names)
+
+    # -- grid-level reductions --------------------------------------------
 
     def geomean_grid(self) -> np.ndarray:
-        """Geomean speedup vs baseline for every grid point: ``(D, L, C)``."""
+        """Geomean speedup vs the in-grid baseline row, for every cell.
+
+        Shape = the grid shape.  The reference is the baseline design at
+        the SAME non-design coordinates, so axes that override the
+        baseline too (workload or design-field axes) compare like against
+        like; :meth:`speedup_grid` compares against the un-overridden
+        baseline instead.  Once :meth:`sel` has pinned the design axis the
+        in-grid baseline row is gone, so this delegates to
+        :meth:`speedup_grid` (identical whenever no design-field axis is
+        in play).
+        """
+        if "design" not in self.axis_names:
+            return self.speedup_grid()
+        p = self._axis_pos("design")
         b = self.design_index(self.baseline_name)
-        ratio = self.results.ipc / self.results.ipc[b][None]
+        ipc = self.results.ipc
+        base = np.take(ipc, [b], axis=p)
+        return np.exp(np.mean(np.log(ipc / base), axis=-1))
+
+    @functools.cached_property
+    def _baseline_ipc(self) -> np.ndarray:
+        """IPC of the UN-overridden baseline design at every cell's
+        workload / core-count coordinates (design and design-field axes
+        pinned to the plain baseline): the fixed reference column for
+        :meth:`speedup_grid` and :meth:`pareto`.
+
+        The baseline only varies along ``n_active`` and workload axes (and
+        the iface axis if the baseline itself is CXL), so only those are
+        solved -- sel()-pinned coordinates included -- and the result is
+        broadcast across the rest of the grid.
+        """
+        base = self.baseline_sys
+        varying = (KIND_N_ACTIVE, KIND_WORKLOAD_FIELD) + (
+            (KIND_IFACE,) if base.is_cxl else ())
+        live = [ax for ax in self.axes if ax.kind in varying]
+        pins = [ax for ax in self.pinned if ax.kind in varying]
+        spec = SweepSpec((Axis("design", (base,), KIND_DESIGN),
+                          *live, *pins))
+        flat = build_flat(spec, pin_design=base)
+        res = cpu_model.solve_cells(
+            flat["sysa"], n_active=flat["n_active"],
+            iface_override_ns=flat["iface_override_ns"],
+            workload_overrides=flat["workload_overrides"],
+            baseline=base, workloads=self.workloads)
+        w = res.ipc.shape[-1]
+        # Broadcastable view: live-axis lengths in grid position, 1 elsewhere.
+        ipc = res.ipc.reshape(tuple(len(ax) for ax in live) + (w,))
+        bshape = tuple(len(ax) if ax.kind in varying else 1
+                       for ax in self.axes) + (w,)
+        return ipc.reshape(bshape)
+
+    def speedup_grid(self) -> np.ndarray:
+        """Geomean speedup of every cell vs the fixed, un-overridden
+        baseline design (workload axes still apply to the reference --
+        a modified workload is compared on both systems)."""
+        ratio = self.results.ipc / self._baseline_ipc
         return np.exp(np.mean(np.log(ratio), axis=-1))
 
+    def _effective_fields(self) -> dict[str, np.ndarray]:
+        """Per-cell effective design fields: the design axis' own values,
+        replaced wherever a design-field axis overrides them.  sel()-pinned
+        axes participate as length-1 trailing dimensions, so a pinned
+        design or field override still shapes the cost accounting."""
+        from repro.core.sweepspec import _flat
+        axes = self.axes + self.pinned
+        ext = tuple(len(ax) for ax in axes)
+        names = [ax.name for ax in axes]
+        designs = axes[names.index("design")].values
+        out = {}
+        for f in ("dram_channels", "links", "llc_mb_per_core"):
+            if f in names:
+                q = names.index(f)
+                eff = _flat(axes[q].values, q, ext)
+            else:
+                per_design = [float(getattr(d, f)) for d in designs]
+                eff = _flat(per_design, names.index("design"), ext)
+            # pinned axes are length 1, so the flat cell count equals the
+            # live grid's -- collapse straight to the live shape.
+            out[f] = eff.reshape(self.shape)
+        return out
 
-def sweep(designs=None, *, iface_lat_grid=(None,),
-          n_active_grid=(hw.SIM_CORES,), workloads=WORKLOADS,
-          baseline: MemSystem = DDR_BASELINE) -> SweepResult:
-    """Solve a whole design-space grid in one jitted, vmapped pass.
+    def design_cost_grid(self) -> dict[str, np.ndarray]:
+        """Per-cell ``rel_area`` / ``rel_pins`` from the effective design
+        fields -- a swept LLC or channel count changes the cost too."""
+        eff = self._effective_fields()
+        return design_cost(eff["dram_channels"], eff["links"],
+                           eff["llc_mb_per_core"])
 
-    ``designs`` defaults to every registered design; the baseline is
-    prepended if absent so comparisons can always be sliced.
-    ``iface_lat_grid`` entries override the CXL premium of CXL designs
-    (``None`` = each design's own value).  ``n_active_grid`` are active
-    core counts; calibration is redone per core count, as in the paper.
+    def pareto(self, *, cost: str = "rel_area") -> list[dict]:
+        """The non-dominated (min cost, max geomean speedup) frontier over
+        every grid cell.
+
+        ``cost`` is ``"rel_area"`` or ``"rel_pins"``.  Pin axes first with
+        :meth:`sel` to restrict the subset: ``sw.sel(n_active=12).
+        pareto()``.  Returns frontier points sorted by ascending cost,
+        each a dict of the cell's named coordinates plus ``rel_area``,
+        ``rel_pins`` and ``geomean_speedup`` (vs the un-overridden
+        baseline).
+        """
+        costs = self.design_cost_grid()
+        if cost not in costs:
+            raise ValueError(f"cost must be one of {sorted(costs)}, "
+                             f"got {cost!r}")
+        gm = self.speedup_grid().reshape(-1)
+        flat_costs = {k: v.reshape(-1) for k, v in costs.items()}
+        order = np.lexsort((-gm, flat_costs[cost]))
+        frontier, best = [], -np.inf
+        for cell in order:
+            if gm[cell] <= best + 1e-12:
+                continue
+            best = gm[cell]
+            idx = np.unravel_index(cell, self.shape)
+            point = {ax.name: ax.coords[0] for ax in self.pinned}
+            point.update({ax.name: ax.coords[i]
+                          for ax, i in zip(self.axes, idx)})
+            point.update(
+                rel_area=float(flat_costs["rel_area"][cell]),
+                rel_pins=float(flat_costs["rel_pins"][cell]),
+                geomean_speedup=float(gm[cell]))
+            frontier.append(point)
+        return frontier
+
+
+def solve_spec(spec: SweepSpec, *, workloads=WORKLOADS,
+               baseline: MemSystem = DDR_BASELINE) -> SweepResult:
+    """Solve a named-axis :class:`SweepSpec` in one jitted, vmapped pass.
+
+    The baseline is prepended to the design axis if absent so comparisons
+    can always be sliced; two different designs sharing a name are
+    rejected (results are name-keyed).  However many axes the spec
+    declares, the grid costs ONE XLA trace per flattened cell count.
     """
-    designs = tuple(designs) if designs is not None else all_designs()
+    axes = list(spec.axes)
+    try:
+        p = [ax.name for ax in axes].index("design")
+    except ValueError:
+        p = 0
+        axes.insert(0, Axis("design", tuple(all_designs()), KIND_DESIGN))
+    designs = tuple(axes[p].values)
     if not any(d.name == baseline.name for d in designs):
         designs = (baseline,) + designs
     seen: dict[str, MemSystem] = {}
@@ -243,15 +507,38 @@ def sweep(designs=None, *, iface_lat_grid=(None,),
             # name would silently shadow each other.
             raise ValueError(
                 f"two different designs named {d.name!r} in one sweep")
-    designs = tuple(seen.values())
-    res = solve_batch(designs, n_active_grid=n_active_grid,
-                      iface_lat_grid=iface_lat_grid, baseline=baseline,
-                      workloads=workloads)
+    axes[p] = Axis("design", tuple(seen.values()), KIND_DESIGN)
+    spec = SweepSpec(tuple(axes))
+    flat = build_flat(spec)
+    res = cpu_model.solve_cells(
+        flat["sysa"], n_active=flat["n_active"],
+        iface_override_ns=flat["iface_override_ns"],
+        design_overrides=flat["design_overrides"],
+        workload_overrides=flat["workload_overrides"],
+        baseline=baseline, workloads=workloads)
     return SweepResult(
-        designs=designs, iface_lats=tuple(iface_lat_grid),
-        cores=tuple(int(n) for n in n_active_grid),
-        names=tuple(w.name for w in workloads), results=res,
-        baseline_name=baseline.name)
+        axes=spec.axes, names=tuple(w.name for w in workloads),
+        results=res.reshape(*spec.shape), baseline_name=baseline.name,
+        workloads=tuple(workloads), baseline_sys=baseline)
+
+
+def sweep(designs=None, *, iface_lat_grid=(None,),
+          n_active_grid=(hw.SIM_CORES,), workloads=WORKLOADS,
+          baseline: MemSystem = DDR_BASELINE) -> SweepResult:
+    """Solve the historical designs x latencies x cores grid.
+
+    Thin shim over :func:`solve_spec` -- the positional triple is just the
+    named axes ``(design, iface_lat_ns, n_active)``, so results keep the
+    legacy ``(D, L, C, n_workloads)`` layout bit-for-bit.
+    ``iface_lat_grid`` entries override the CXL premium of CXL designs
+    (``None`` = each design's own value).  ``n_active_grid`` are active
+    core counts; calibration is redone per core count, as in the paper.
+    """
+    spec = sweep_spec(
+        design=tuple(designs) if designs is not None else all_designs(),
+        iface_lat_ns=tuple(iface_lat_grid),
+        n_active=tuple(n_active_grid))
+    return solve_spec(spec, workloads=workloads, baseline=baseline)
 
 
 @functools.lru_cache(maxsize=None)
@@ -328,6 +615,24 @@ def _die_area(cores, llc_mb, ddr_ch, pcie_x8):
             ddr_ch * hw.AREA_DDR_CH + pcie_x8 * hw.AREA_PCIE_X8)
 
 
+def design_cost(dram_channels, links, llc_mb_per_core) -> dict:
+    """Vectorized Table-1/2 area & pin accounting for arbitrary field
+    values (inputs broadcast together; ``is_cxl`` derives from the link
+    count).  The shared core behind :func:`area_report` and
+    :meth:`SweepResult.design_cost_grid` / :meth:`SweepResult.pareto`."""
+    ch = np.asarray(dram_channels, np.float64)
+    lk = np.asarray(links, np.float64)
+    llc = np.asarray(llc_mb_per_core, np.float64)
+    base = _die_area(FULL_CORES, FULL_CORES * 2, FULL_DDR_CHANNELS, 0)
+    scale = FULL_CORES // hw.SIM_CORES
+    ddr_ch = np.where(lk > 0, 0.0, ch * scale)
+    pcie_x8 = lk * scale
+    area = _die_area(FULL_CORES, FULL_CORES * llc, ddr_ch, pcie_x8)
+    pins = ddr_ch * hw.DDR5_PINS + pcie_x8 * hw.PCIE_X8_PINS
+    return dict(rel_area=area / base, mem_pins=pins,
+                rel_pins=pins / (12 * hw.DDR5_PINS))
+
+
 def area_report(designs=None) -> dict:
     """Reproduces Table 2's relative-area column from Table 1's entries.
 
@@ -335,17 +640,12 @@ def area_report(designs=None) -> dict:
     channels) scaled 12-core slice -> 144-core server, so registry
     additions get Table-2 accounting for free.
     """
-    base = _die_area(FULL_CORES, FULL_CORES * 2, FULL_DDR_CHANNELS, 0)
-    scale = FULL_CORES // hw.SIM_CORES
     out = {}
     for sys in (designs if designs is not None else all_designs()):
-        llc_mb = FULL_CORES * sys.llc_mb_per_core
-        ddr_ch = 0 if sys.is_cxl else sys.dram_channels * scale
-        pcie_x8 = sys.links * scale
-        area = _die_area(FULL_CORES, llc_mb, ddr_ch, pcie_x8)
-        pins = ddr_ch * hw.DDR5_PINS + pcie_x8 * hw.PCIE_X8_PINS
-        out[sys.name] = dict(rel_area=area / base, mem_pins=pins,
-                             rel_pins=pins / (12 * hw.DDR5_PINS))
+        c = design_cost(sys.dram_channels, sys.links, sys.llc_mb_per_core)
+        out[sys.name] = dict(rel_area=float(c["rel_area"]),
+                             mem_pins=int(c["mem_pins"]),
+                             rel_pins=float(c["rel_pins"]))
     return out
 
 

@@ -25,10 +25,21 @@ humans; the solver itself consumes :class:`MemSystemArrays`, a pytree of
 float leaves (``is_cxl`` is a 0/1 mask) that can be stacked along a leading
 design axis.  All model terms are branch-free in the design dimension
 (``jnp.where``/mask arithmetic instead of ``if sys.is_cxl``), so one jitted
-function -- :data:`_solve_jit` -- serves both the single-design
-:func:`solve` path and the vmapped designs x latencies x core-counts grid of
-:func:`solve_batch`.  A grid sweep therefore costs ONE XLA compile total,
-where the old code paid one compile per (design, core-count) pair.
+function -- :data:`_solve_cells_jit` -- serves every solve surface.
+
+Named-axis sweeps: the jitted solver consumes ONE flattened cell axis plus
+two overrides pytrees (``design_overrides`` / ``workload_overrides``, NaN =
+"keep the design's / workload's own value", applied branch-free inside the
+trace exactly like ``iface_override_ns``'s NaN mask).  Any grid of named
+axes -- designs x iface latencies x LLC sizes x kappa x ... -- lowers to
+the same flat call, so a sweep of ANY dimensionality costs one XLA compile
+per flattened cell count.  :func:`solve` and :func:`solve_batch` are thin
+shims over it; ``sweepspec.SweepSpec`` is the declarative front end.
+
+The whole solve is differentiable end to end (the fixed point unrolls
+through ``lax.fori_loop`` with static bounds): :func:`design_gradient`
+exposes d(geomean speedup)/d(design field) for gradient-based design
+optimization.
 """
 
 from __future__ import annotations
@@ -41,7 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hw, queueing
-from repro.core.workloads import WORKLOADS, WorkloadArrays, as_arrays
+from repro.core.workloads import (SWEEPABLE_FIELDS as SWEEPABLE_WORKLOAD_FIELDS,
+                                  WORKLOADS, WorkloadArrays, as_arrays)
 
 #: Architectural bound on outstanding misses per core (MSHRs / 256-ROB).
 MAX_MLP = hw.MAX_MLP
@@ -106,10 +118,36 @@ class MemSystemArrays(NamedTuple):
     is_cxl: jnp.ndarray
 
 
+#: Design fields a sweep axis may override (everything except the derived
+#: ``is_cxl`` mask and ``iface_lat_ns``, which has its own NaN-masked
+#: override argument with the legacy CXL-only semantics).
+SWEEPABLE_DESIGN_FIELDS = ("dram_channels", "links", "link_rd_gbps",
+                           "link_wr_gbps", "llc_mb_per_core")
+
+
 def stack_designs(designs) -> MemSystemArrays:
     """Stack ``MemSystem`` façades into one ``(D,)``-leaved pytree."""
     leaves = [d.as_arrays() for d in designs]
     return MemSystemArrays(*(jnp.stack(xs) for xs in zip(*leaves)))
+
+
+def _apply_design_overrides(sysa: MemSystemArrays, ov) -> MemSystemArrays:
+    """NaN-masked per-field substitution; ``is_cxl`` is re-derived from the
+    effective link count so a ``links`` axis can cross the DDR/CXL boundary
+    branch-free."""
+    eff = {f: jnp.where(jnp.isnan(v), getattr(sysa, f), v)
+           for f, v in ov.items()}
+    sysa = sysa._replace(**eff)
+    return sysa._replace(is_cxl=(sysa.links > 0).astype(sysa.links.dtype))
+
+
+def _apply_workload_overrides(wl: WorkloadArrays, ov) -> WorkloadArrays:
+    """NaN-masked substitution of one scalar per behavioral parameter,
+    broadcast over all workloads (a bound axis redefines the parameter for
+    the whole suite -- a synthetic-workload sweep)."""
+    repl = {f: jnp.where(jnp.isnan(v), getattr(wl, f), v)
+            for f, v in ov.items()}
+    return dataclasses.replace(wl, **repl)
 
 
 def _bw_efficiency(wb):
@@ -145,6 +183,12 @@ class ModelResult:
         """Slice every field identically (e.g. one design from a batch)."""
         pick = lambda x: x[idx]
         return ModelResult(**{f.name: pick(getattr(self, f.name))
+                              for f in dataclasses.fields(self)})
+
+    def reshape(self, *grid_shape) -> "ModelResult":
+        """Reshape the leading (cell) axes; the workload axis stays last."""
+        re = lambda x: x.reshape(tuple(grid_shape) + x.shape[-1:])
+        return ModelResult(**{f.name: re(getattr(self, f.name))
                               for f in dataclasses.fields(self)})
 
 
@@ -301,8 +345,8 @@ def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
 
 
 #: Number of times the jitted solver has been TRACED (not called).  A trace
-#: only happens on a new input shape, so a whole designs x latencies x cores
-#: grid bumps this by exactly one -- tests pin that.
+#: only happens on a new flattened cell count, so a whole named-axis grid
+#: -- however many axes -- bumps this by exactly one; tests pin that.
 _TRACE_COUNT = [0]
 
 
@@ -310,27 +354,31 @@ def solve_trace_count() -> int:
     return _TRACE_COUNT[0]
 
 
-def _solve_grid(wl, sysa, base, n_active_grid, iface_grid):
-    """vmap ``_solve_point`` over designs x iface latencies x core counts.
+def _solve_cells(wl, sysa, base, n_active, iface_ov, sys_ov, wl_ov):
+    """vmap ``_solve_point`` over ONE flattened axis of grid cells.
 
-    Axis order of every output: ``(design, iface_lat, n_active, workload)``.
+    Every per-cell input -- the design leaves, the core count, the CXL
+    latency override and both overrides pytrees -- is ``(N,)``; overrides
+    are applied branch-free inside the cell before the fixed point runs.
+    Output leaves are ``(N, n_workloads)``.
     """
     _TRACE_COUNT[0] += 1  # side effect runs at trace time only
-    f = _solve_point
-    f = jax.vmap(f, in_axes=(None, None, None, 0, None))    # core counts
-    f = jax.vmap(f, in_axes=(None, None, None, None, 0))    # iface latencies
-    f = jax.vmap(f, in_axes=(None, 0, None, None, None))    # designs
-    return f(wl, sysa, base, n_active_grid, iface_grid)
+
+    def cell(s, n, io, so, wo):
+        return _solve_point(_apply_workload_overrides(wl, wo),
+                            _apply_design_overrides(s, so), base, n, io)
+
+    return jax.vmap(cell)(sysa, n_active, iface_ov, sys_ov, wl_ov)
 
 
-_solve_jit = jax.jit(_solve_grid)
+_solve_cells_jit = jax.jit(_solve_cells)
 
 
 def _pack_result(out, squeeze: bool) -> ModelResult:
     ipc, latency, queue, sigma, rho, read, write, iface = out
     to_np = lambda x: np.asarray(x, np.float64)
     if squeeze:
-        to_np = lambda x: np.asarray(x, np.float64)[0, 0, 0]
+        to_np = lambda x: np.asarray(x, np.float64)[0]
     ipc = to_np(ipc)
     return ModelResult(
         ipc=ipc, cpi=1.0 / ipc, latency_ns=to_np(latency),
@@ -345,17 +393,47 @@ def _grid(values) -> jnp.ndarray:
                         for v in values])
 
 
+def _nan_cells(n: int, fields) -> dict:
+    nans = jnp.full((n,), jnp.nan)
+    return {f: nans for f in fields}
+
+
+def solve_cells(sysa: MemSystemArrays, *, n_active, iface_override_ns=None,
+                design_overrides=None, workload_overrides=None,
+                baseline: MemSystem | None = None,
+                workloads=WORKLOADS) -> ModelResult:
+    """Solve N flattened grid cells in one jitted call.
+
+    ``sysa`` leaves and ``n_active`` are ``(N,)``; ``iface_override_ns``
+    and every overrides entry are ``(N,)`` with NaN meaning "keep the
+    design's / workload's own value".  Missing override fields are filled
+    with NaN so the jit cache keys on N alone -- any axis combination of
+    the same flattened size shares one compile.
+    """
+    wl = _to_jnp(as_arrays(workloads))
+    base = (baseline or DDR_BASELINE).as_arrays()
+    n = int(np.shape(sysa.dram_channels)[0])
+    j = lambda x: jnp.asarray(np.asarray(x, np.float64))
+    sysa = MemSystemArrays(*(j(leaf) for leaf in sysa))
+    iface = (jnp.full((n,), jnp.nan) if iface_override_ns is None
+             else j(iface_override_ns))
+    sys_ov = _nan_cells(n, SWEEPABLE_DESIGN_FIELDS)
+    sys_ov.update({f: j(v) for f, v in (design_overrides or {}).items()})
+    wl_ov = _nan_cells(n, SWEEPABLE_WORKLOAD_FIELDS)
+    wl_ov.update({f: j(v) for f, v in (workload_overrides or {}).items()})
+    out = _solve_cells_jit(wl, sysa, base, j(n_active), iface, sys_ov, wl_ov)
+    return _pack_result(out, squeeze=False)
+
+
 def solve(sys: MemSystem, *, baseline: MemSystem | None = None,
           n_active: int = hw.SIM_CORES, iface_lat_ns: float | None = None,
           workloads=WORKLOADS) -> ModelResult:
     """Evaluate all workloads on ``sys`` (calibrated against ``baseline``).
 
-    Thin wrapper over the batched solver with 1-sized grids: every single-
-    design call, for ANY design / core count / latency premium, shares one
-    XLA compilation.
+    Thin wrapper over the cell solver with N=1: every single-design call,
+    for ANY design / core count / latency premium, shares one XLA
+    compilation.
     """
-    wl = _to_jnp(as_arrays(workloads))
-    base = (baseline or DDR_BASELINE).as_arrays()
     sysa = stack_designs([sys])
     if iface_lat_ns is not None:
         # Legacy solve() applied an explicit override even to non-CXL
@@ -363,8 +441,10 @@ def solve(sys: MemSystem, *, baseline: MemSystem | None = None,
         sysa = sysa._replace(
             iface_lat_ns=jnp.full_like(sysa.iface_lat_ns,
                                        float(iface_lat_ns)))
-    out = _solve_jit(wl, sysa, base, _grid([n_active]), _grid([iface_lat_ns]))
-    return _pack_result(out, squeeze=True)
+    res = solve_cells(sysa, n_active=_grid([n_active]),
+                      iface_override_ns=_grid([iface_lat_ns]),
+                      baseline=baseline, workloads=workloads)
+    return res[0]
 
 
 def solve_batch(designs, *, n_active_grid=(hw.SIM_CORES,),
@@ -380,12 +460,16 @@ def solve_batch(designs, *, n_active_grid=(hw.SIM_CORES,),
     Returns a :class:`ModelResult` whose arrays have shape
     ``(len(designs), len(iface_lat_grid), len(n_active_grid), n_workloads)``.
     """
-    wl = _to_jnp(as_arrays(workloads))
-    base = (baseline or DDR_BASELINE).as_arrays()
-    sysa = stack_designs(tuple(designs))
-    out = _solve_jit(wl, sysa, base, _grid(n_active_grid),
-                     _grid(iface_lat_grid))
-    return _pack_result(out, squeeze=False)
+    designs = tuple(designs)
+    d, l, c = len(designs), len(iface_lat_grid), len(n_active_grid)
+    sysa = stack_designs(designs)
+    # Flatten design-major / core-minor: cell (i, j, k) -> i*L*C + j*C + k.
+    sysa = MemSystemArrays(*(jnp.repeat(leaf, l * c) for leaf in sysa))
+    iface = jnp.tile(jnp.repeat(_grid(iface_lat_grid), c), d)
+    n_active = jnp.tile(_grid(n_active_grid), d * l)
+    res = solve_cells(sysa, n_active=n_active, iface_override_ns=iface,
+                      baseline=baseline, workloads=workloads)
+    return res.reshape(d, l, c)
 
 
 def _to_jnp(wl: WorkloadArrays) -> WorkloadArrays:
@@ -470,6 +554,78 @@ def variance_experiment(workload_names=FIG3_WORKLOADS, dists=FIG3_DISTS):
     return out
 
 
-def geomean(x) -> float:
+def geomean(x, names=None) -> float:
+    """Geometric mean of strictly positive values.
+
+    Non-positive (or NaN) entries would silently propagate NaN out of the
+    log; raise instead, naming the offending workloads when ``names`` is
+    given (``Comparison.geomean_speedup`` passes its workload names).
+    """
     x = np.asarray(x, np.float64)
+    good = x > 0  # NaN compares false
+    if not np.all(good):
+        bad = np.flatnonzero(~good.reshape(-1))
+        flat = x.reshape(-1)
+        label = lambda i: names[i] if names is not None else f"[{i}]"
+        detail = ", ".join(f"{label(int(i))}={flat[i]:g}" for i in bad[:8])
+        more = "" if bad.size <= 8 else f" (+{bad.size - 8} more)"
+        raise ValueError(
+            f"geomean requires positive inputs; offending entries: "
+            f"{detail}{more}")
     return float(np.exp(np.mean(np.log(x))))
+
+
+# ---------------------------------------------------------------------------
+# Gradient-based design optimization: jax.grad through the fixed point.
+# ---------------------------------------------------------------------------
+
+#: Design fields :func:`design_gradient` may differentiate with respect to
+#: (the continuous fields; ``is_cxl`` topology is held fixed).
+GRADIENT_FIELDS = SWEEPABLE_DESIGN_FIELDS + ("iface_lat_ns",)
+
+
+def _gm_speedup(vals, sysa0, wl, basea, n_active, base_ipc):
+    """Geomean speedup of ``sysa0`` with ``vals`` substituted, vs a fixed
+    baseline IPC vector -- the scalar :func:`design_gradient` derives."""
+    sysa = sysa0._replace(**{k: jnp.asarray(v) for k, v in vals.items()})
+    nan = jnp.asarray(float("nan"))
+    ipc = _solve_point(wl, sysa, basea, n_active, nan)[0]
+    return jnp.exp(jnp.mean(jnp.log(ipc / base_ipc)))
+
+
+#: Module-level jit so repeated gradient calls (e.g. an optimizer loop)
+#: recompile only per distinct field set, not per call.
+_design_grad_jit = jax.jit(jax.grad(_gm_speedup))
+
+
+def design_gradient(sys: MemSystem | None = None,
+                    fields=GRADIENT_FIELDS, *,
+                    n_active: int = hw.SIM_CORES,
+                    baseline: MemSystem | None = None,
+                    workloads=WORKLOADS) -> dict[str, float]:
+    """d(geomean speedup vs baseline) / d(design field) at ``sys``.
+
+    Differentiates straight through the damped fixed point (the
+    ``fori_loop`` has static bounds, so JAX unrolls its reverse pass via
+    scan).  The ``is_cxl`` topology mask is held at the design's own value
+    -- gradients flow through capacities (channels, links, bandwidths,
+    LLC), not through the discrete DDR/CXL switch.  Returns
+    ``{field: gradient}`` in the order requested.
+    """
+    sys = sys if sys is not None else COAXIAL_4X
+    unknown = [f for f in fields if f not in GRADIENT_FIELDS]
+    if unknown:
+        raise ValueError(f"non-differentiable or unknown design fields "
+                         f"{unknown}; choose from {GRADIENT_FIELDS}")
+    baseline = baseline or DDR_BASELINE
+    wl = _to_jnp(as_arrays(workloads))
+    # The reference is constant under the differentiated fields; reuse the
+    # shared cell solver's compile for it.
+    base_ipc = jnp.asarray(
+        solve(baseline, baseline=baseline, n_active=n_active,
+              workloads=workloads).ipc)
+    vals = {f: jnp.asarray(float(getattr(sys, f))) for f in fields}
+    grads = _design_grad_jit(vals, sys.as_arrays(), wl,
+                             baseline.as_arrays(),
+                             jnp.asarray(float(n_active)), base_ipc)
+    return {f: float(grads[f]) for f in fields}

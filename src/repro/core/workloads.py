@@ -140,12 +140,20 @@ WORKLOADS: tuple[Workload, ...] = (
 NAMES = tuple(w.name for w in WORKLOADS)
 SUITES = tuple(sorted({w.suite for w in WORKLOADS}))
 
+#: Behavioral parameters a sweep axis may bind (every float field of
+#: :class:`WorkloadArrays`); ``name`` is identity, not a parameter.
+SWEEPABLE_FIELDS = ("ipc", "mpki", "wb", "kappa", "eta", "exec_frac",
+                    "gamma", "pf_boost", "ws_mb")
+
+_BY_NAME: dict[str, "Workload"] = {w.name: w for w in WORKLOADS}
+
 
 def by_name(name: str) -> Workload:
-    for w in WORKLOADS:
-        if w.name == name:
-            return w
-    raise KeyError(name)
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; "
+                       f"known: {sorted(_BY_NAME)}") from None
 
 
 @dataclasses.dataclass(frozen=True)

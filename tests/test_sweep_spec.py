@@ -1,0 +1,305 @@
+"""Named-axis sweep spec: legacy equivalence, multi-axis compile count,
+override correctness, tolerant coordinate lookup, pareto and gradients.
+
+The redesign's contract: any legacy ``sweep(designs, iface_lat_grid,
+n_active_grid)`` call equals the spec-built sweep slice for slice, a grid
+of ANY number of axes costs one XLA trace, and the two new consumers
+(``SweepResult.pareto`` / ``design_gradient``) are numerically sane.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import coaxial, cpu_model, hw, workloads
+from repro.core.cpu_model import (COAXIAL_4X, DDR_BASELINE, DESIGNS,
+                                  design_gradient, geomean, solve,
+                                  solve_batch, solve_trace_count)
+from repro.core.sweepspec import Axis, sweep_spec
+
+
+def _spec_equals_batch(designs, lat_grid, core_grid):
+    """Legacy positional grid == spec-built sweep, slice for slice."""
+    spec = sweep_spec(design=designs, iface_lat_ns=lat_grid,
+                      n_active=core_grid)
+    sw = coaxial.solve_spec(spec)
+    ref = solve_batch(sw.designs, n_active_grid=core_grid,
+                      iface_lat_grid=lat_grid)
+    assert sw.shape == ref.ipc.shape[:-1]
+    for field in ("ipc", "latency_ns", "queue_ns", "rho", "iface_ns"):
+        np.testing.assert_allclose(getattr(sw.results, field),
+                                   getattr(ref, field), rtol=1e-6,
+                                   atol=1e-9, err_msg=field)
+
+
+class TestLegacyEquivalence:
+    def test_deterministic_grid(self):
+        _spec_equals_batch(DESIGNS, (None, 50.0), (1, 8, hw.SIM_CORES))
+
+    def test_property_based_equivalence(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        lat = st.one_of(st.none(),
+                        st.floats(5.0, 200.0, allow_nan=False))
+        grids = st.tuples(
+            st.lists(st.sampled_from(DESIGNS), min_size=1, max_size=3,
+                     unique_by=lambda d: d.name),
+            st.lists(lat, min_size=1, max_size=3, unique_by=str),
+            st.lists(st.integers(1, hw.SIM_CORES), min_size=1, max_size=2,
+                     unique=True))
+
+        @settings(max_examples=10, deadline=None)
+        @given(grids)
+        def run(g):
+            designs, lats, cores = g
+            _spec_equals_batch(tuple(designs), tuple(lats), tuple(cores))
+
+        run()
+
+
+class TestMultiAxis:
+    @pytest.fixture(scope="class")
+    def sw4(self):
+        spec = sweep_spec(design=DESIGNS, iface_lat_ns=(None, 50.0),
+                          llc_mb_per_core=(0.5, 2.0, 4.0),
+                          kappa=(1.0, 1.6))
+        return coaxial.solve_spec(spec)
+
+    def test_four_axis_grid_is_one_trace(self):
+        # A flattened cell count no other test uses forces a fresh trace.
+        spec = sweep_spec(design=DESIGNS[1:3], iface_lat_ns=(None, 41.0),
+                          llc_mb_per_core=(0.5, 1.0, 2.0),
+                          kappa=(1.0, 1.3, 1.9))  # baseline prepended: N=54
+        before = solve_trace_count()
+        sw = coaxial.solve_spec(spec)
+        assert sw.shape == (3, 2, 3, 3)
+        assert solve_trace_count() == before + 1
+        # Same flattened size, different axis values: cache hit.
+        coaxial.solve_spec(sweep_spec(
+            design=DESIGNS[1:3], iface_lat_ns=(10.0, 90.0),
+            llc_mb_per_core=(1.0, 2.0, 8.0), kappa=(1.1, 2.0, 3.0)))
+        assert solve_trace_count() == before + 1
+
+    def test_design_field_axis_matches_replaced_design(self, sw4):
+        for llc in (0.5, 4.0):
+            got = sw4.sel(design="coaxial-4x", iface_lat_ns=None,
+                          llc_mb_per_core=llc, kappa=1.6)
+            mod = dataclasses.replace(COAXIAL_4X, llc_mb_per_core=llc)
+            wl = [dataclasses.replace(w, kappa=1.6)
+                  for w in workloads.WORKLOADS]
+            ref = solve(mod, workloads=wl)
+            np.testing.assert_allclose(got.results.ipc, ref.ipc,
+                                       rtol=1e-6, atol=1e-9)
+
+    def test_workload_axis_matches_modified_workloads(self, sw4):
+        got = sw4.sel(design=DDR_BASELINE, iface_lat_ns=None,
+                      llc_mb_per_core=2.0, kappa=1.0)
+        wl = [dataclasses.replace(w, kappa=1.0) for w in workloads.WORKLOADS]
+        ref = solve(DDR_BASELINE, workloads=wl)
+        np.testing.assert_allclose(got.results.ipc, ref.ipc,
+                                   rtol=1e-6, atol=1e-9)
+
+    def test_links_axis_crosses_ddr_cxl_boundary(self):
+        # links=0 must flip the is_cxl mask off: the cell equals the plain
+        # DDR design with the same channel count.
+        sw = sweep_spec(design=(COAXIAL_4X,), links=(0.0,)).solve()
+        got = sw.sel(design="coaxial-4x", links=0.0)
+        # link bandwidths are zeroed by the mask, not the fields; the cell
+        # must equal the equivalently-replaced design solved directly
+        # (including its iface_lat_ns field, which non-CXL designs apply
+        # unconditionally).
+        ref = solve(dataclasses.replace(COAXIAL_4X, links=0))
+        np.testing.assert_allclose(got.results.ipc, ref.ipc, rtol=1e-6)
+        np.testing.assert_allclose(got.results.iface_ns, ref.iface_ns,
+                                   rtol=1e-6)
+
+    def test_sel_partial_keeps_axes(self, sw4):
+        sub = sw4.sel(design="coaxial-4x", kappa=1.6)
+        assert sub.axis_names == ("iface_lat_ns", "llc_mb_per_core")
+        assert sub.shape == (2, 3)
+        full = sub.sel(iface_lat_ns=50.0, llc_mb_per_core=2.0)
+        assert full.results.ipc.shape == (35,)
+
+
+class TestCoordinateLookup:
+    @pytest.fixture(scope="class")
+    def sw(self):
+        return coaxial.sweep((DDR_BASELINE, COAXIAL_4X),
+                             iface_lat_grid=(None, 50.0))
+
+    def test_int_and_float_resolve_identically(self, sw):
+        a = sw.sel(design="coaxial-4x", iface_lat_ns=50)
+        b = sw.sel(design="coaxial-4x", iface_lat_ns=50.0)
+        np.testing.assert_array_equal(a.results.ipc, b.results.ipc)
+
+    def test_near_miss_from_linspace_resolves(self):
+        lats = tuple(np.linspace(10.0, 100.0, 7))  # e.g. 55.00000000000001
+        sw = coaxial.sweep((COAXIAL_4X,), iface_lat_grid=lats)
+        sw.sel(design="coaxial-4x", iface_lat_ns=55.0)
+
+    def test_unknown_coordinate_lists_valid_ones(self, sw):
+        with pytest.raises(KeyError, match=r"valid coordinates.*50\.0"):
+            sw.sel(design="coaxial-4x", iface_lat_ns=77.0)
+
+    def test_unconvertible_coordinate_still_keyerror(self, sw):
+        # A tuple or string must get the same clear KeyError, not a
+        # TypeError out of float().
+        with pytest.raises(KeyError, match="valid coordinates"):
+            sw.sel(design="coaxial-4x", iface_lat_ns=(50.0,))
+        with pytest.raises(KeyError, match="valid coordinates"):
+            sw.sel(design="coaxial-4x", iface_lat_ns="fast")
+
+    def test_unknown_axis_lists_axes(self, sw):
+        with pytest.raises(KeyError, match="iface_lat_ns"):
+            sw.sel(bogus_axis=1.0)
+
+    def test_unpinned_long_axis_is_an_error(self, sw):
+        with pytest.raises(KeyError, match="iface_lat_ns"):
+            sw.indices(design="coaxial-4x")
+
+    def test_spec_rejects_unknown_field(self):
+        with pytest.raises(ValueError, match="kappa"):
+            sweep_spec(design=DESIGNS, not_a_field=(1.0,))
+
+    def test_spec_rejects_none_off_iface_axis(self):
+        with pytest.raises(ValueError, match="iface_lat_ns"):
+            sweep_spec(design=DESIGNS, kappa=(None,))
+
+
+class TestPareto:
+    @pytest.fixture(scope="class")
+    def sw(self):
+        from benchmarks.pareto_frontier import frontier_sweep
+        return frontier_sweep()
+
+    def test_frontier_is_nondominated_and_sorted(self, sw):
+        front = sw.pareto(cost="rel_area")
+        assert len(front) >= 3
+        areas = [p["rel_area"] for p in front]
+        gms = [p["geomean_speedup"] for p in front]
+        assert areas == sorted(areas)
+        assert gms == sorted(gms)  # strictly better or it would be dominated
+
+    def test_frontier_contains_global_best(self, sw):
+        front = sw.pareto(cost="rel_area")
+        assert front[-1]["geomean_speedup"] == pytest.approx(
+            float(np.max(sw.speedup_grid())))
+
+    def test_knee_point_on_frontier(self, sw):
+        from benchmarks.pareto_frontier import knee_point
+        front = sw.pareto(cost="rel_area")
+        assert knee_point(front) in front
+
+    def test_speedup_grid_matches_geomean_grid_without_overrides(self):
+        sw = coaxial.sweep((DDR_BASELINE, COAXIAL_4X),
+                           n_active_grid=(8, hw.SIM_CORES))
+        np.testing.assert_allclose(sw.speedup_grid(), sw.geomean_grid(),
+                                   rtol=1e-6)
+
+    def test_bad_cost_key(self, sw):
+        with pytest.raises(ValueError, match="rel_area"):
+            sw.pareto(cost="dollars")
+
+    def test_sel_pins_coords_for_baseline_reference(self):
+        # After sel(n_active=4) the reference must still be solved at 4
+        # active cores: the baseline design's own speedup is exactly 1.
+        sw = coaxial.sweep((DDR_BASELINE, COAXIAL_4X),
+                           n_active_grid=(4, hw.SIM_CORES))
+        sub = sw.sel(n_active=4)
+        b = sub.design_index(DDR_BASELINE.name)
+        np.testing.assert_allclose(sub.speedup_grid()[b], 1.0, rtol=1e-6)
+        # And the reduced grid equals the matching slice of the full one.
+        k = sw.axis("n_active").index(4)
+        np.testing.assert_allclose(sub.speedup_grid(),
+                                   sw.speedup_grid()[:, :, k], rtol=1e-6)
+
+    def test_sel_pins_workload_axis_for_reference(self):
+        spec = sweep_spec(design=(DDR_BASELINE, COAXIAL_4X),
+                          kappa=(1.0, 3.2))
+        sw = coaxial.solve_spec(spec)
+        sub = sw.sel(kappa=3.2)
+        b = sub.design_index(DDR_BASELINE.name)
+        np.testing.assert_allclose(sub.speedup_grid()[b], 1.0, rtol=1e-6)
+        k = sw.axis("kappa").index(3.2)
+        np.testing.assert_allclose(sub.speedup_grid(),
+                                   sw.speedup_grid()[:, k], rtol=1e-6)
+
+    def test_sel_pins_design_field_axis_for_costs(self, sw):
+        # A pinned LLC override must keep shaping the area accounting.
+        sub = sw.sel(llc_mb_per_core=4.0)
+        j = sw.axis("llc_mb_per_core").index(4.0)
+        full = sw.design_cost_grid()["rel_area"]
+        np.testing.assert_allclose(sub.design_cost_grid()["rel_area"],
+                                   full[:, j], rtol=1e-12)
+
+    def test_geomean_grid_after_design_sel_delegates(self):
+        # The docstring's showcase: sel(design=..., kappa=...) then
+        # geomean_grid() -- must equal the full grid's slice, not raise.
+        spec = sweep_spec(design=(DDR_BASELINE, COAXIAL_4X),
+                          kappa=(1.0, 1.6))
+        sw = coaxial.solve_spec(spec)
+        got = sw.sel(design="coaxial-4x", kappa=1.6).geomean_grid()
+        full = sw.geomean_grid()
+        i = sw.design_index("coaxial-4x")
+        k = sw.axis("kappa").index(1.6)
+        np.testing.assert_allclose(got, full[i, k], rtol=1e-6)
+
+    def test_custom_baseline_reference(self):
+        # speedup_grid must reference the sweep's OWN baseline, not the
+        # default DDR point: the custom baseline's row is exactly 1.
+        sw = coaxial.sweep((DDR_BASELINE, COAXIAL_4X),
+                           baseline=cpu_model.COAXIAL_2X)
+        gm = sw.speedup_grid()
+        b = sw.design_index("coaxial-2x")
+        np.testing.assert_allclose(gm[b], 1.0, rtol=1e-6)
+        assert gm[sw.design_index("ddr-baseline"), 0] < 1.0
+
+    def test_pareto_after_sel_matches_full_grid_slice(self, sw):
+        sub = sw.sel(llc_mb_per_core=1.0)
+        front = sub.pareto(cost="rel_area")
+        assert all(p["llc_mb_per_core"] == 1.0 for p in front)
+        gm = sub.speedup_grid()
+        assert front[-1]["geomean_speedup"] == pytest.approx(float(gm.max()))
+
+
+class TestDesignGradient:
+    def test_channels_gradient_positive_at_baseline(self):
+        g = design_gradient(DDR_BASELINE, ("dram_channels",))
+        assert g["dram_channels"] > 0.0
+
+    def test_coaxial_gradients_signs(self):
+        g = design_gradient(COAXIAL_4X,
+                            ("dram_channels", "llc_mb_per_core",
+                             "iface_lat_ns"))
+        assert g["dram_channels"] > 0.0
+        assert g["llc_mb_per_core"] > 0.0
+        assert g["iface_lat_ns"] < 0.0   # a slower link can't help
+
+    def test_rejects_unknown_field(self):
+        with pytest.raises(ValueError, match="is_cxl"):
+            design_gradient(COAXIAL_4X, ("is_cxl",))
+
+
+class TestSatelliteGuards:
+    def test_geomean_rejects_nonpositive_with_names(self):
+        with pytest.raises(ValueError, match="lbm=0"):
+            geomean([1.0, 0.0, 2.0], ("gcc", "lbm", "mcf"))
+
+    def test_geomean_rejects_nan(self):
+        with pytest.raises(ValueError, match=r"\[1\]"):
+            geomean([1.0, float("nan")])
+
+    def test_geomean_positive_path_unchanged(self):
+        assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+
+    def test_by_name_dict_lookup(self):
+        assert workloads.by_name("lbm").name == "lbm"
+        with pytest.raises(KeyError, match="unknown workload"):
+            workloads.by_name("no-such-workload")
+
+    def test_axis_repr_roundtrip(self):
+        ax = Axis("kappa", (1.0, 1.6), "workload_field")
+        assert ax.index(1.6) == 1
+        assert len(ax) == 2
