@@ -1,12 +1,24 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + DES step budget.
 
 Every benchmark prints ``name,us_per_call,derived`` rows; ``derived`` is the
 figure/table-relevant quantity (a speedup, a latency, a roofline fraction).
 """
 
+import os
 import time
 
 import jax
+
+
+def des_steps(default: int) -> int:
+    """Step budget for DES (memsim) benchmarks.
+
+    ``REPRO_DES_STEPS`` caps the default -- CI smoke sets it low to keep
+    the whole benchmark run under a few minutes; it can only shrink the
+    budget, so local full runs are unaffected by a stale environment.
+    """
+    cap = os.environ.get("REPRO_DES_STEPS")
+    return min(default, int(cap)) if cap else default
 
 
 def time_call(fn, *args, warmup=1, iters=3):

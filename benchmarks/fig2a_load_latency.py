@@ -1,27 +1,48 @@
 """Fig 2a: DDR5-4800 load-latency curve -- parametric model vs DES memsim.
 
 Paper anchors: 3x average latency at 50% load, 4x at 60%; p90 4.7x / 7.1x.
+
+Both curves come out of ONE batched distribution sweep
+(``coaxial.validate_calibration``), which also cross-checks the DES
+against the closed form; the per-anchor deltas are emitted as
+``fig2a.crosscheck.*`` rows so calibration drift surfaces in the CI
+report.
 """
 
-import numpy as np
-
-from benchmarks.common import emit, time_call
-from repro.core import memsim, queueing
+from benchmarks.common import des_steps, emit, time_call
+from repro.core import coaxial, queueing
 
 
 def main():
-    rhos = np.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9])
-    us, curve = time_call(
-        lambda: memsim.load_latency_curve(rhos=rhos, steps=120_000), iters=1)
-    for i, r in enumerate(rhos):
-        par = float(queueing.avg_latency_ns(r))
-        p90 = float(queueing.p90_latency_ns(r))
-        emit(f"fig2a.rho{r:.1f}.param_mean_ns", us / len(rhos), f"{par:.1f}")
-        emit(f"fig2a.rho{r:.1f}.des_mean_ns", us / len(rhos),
-             f"{curve['mean_ns'][i]:.1f}")
-        emit(f"fig2a.rho{r:.1f}.param_p90_ns", us / len(rhos), f"{p90:.1f}")
-        emit(f"fig2a.rho{r:.1f}.des_p90_ns", us / len(rhos),
-             f"{curve['p90_ns'][i]:.1f}")
+    rhos = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+    steps = des_steps(200_000)
+    us, val = time_call(
+        lambda: coaxial.validate_calibration(
+            rhos=rhos, steps=steps,
+            reps=max(2, min(64, 9_600_000 // steps))),
+        iters=1)
+    per = us / len(rhos)
+    for a in val["anchors"]:
+        r = a["rho"]
+        emit(f"fig2a.rho{r:.1f}.param_mean_ns", per,
+             f"{a['closed_mean_ns']:.1f}")
+        emit(f"fig2a.rho{r:.1f}.des_mean_ns", per, f"{a['des_mean_ns']:.1f}")
+        emit(f"fig2a.rho{r:.1f}.param_p90_ns", per,
+             f"{a['closed_p90_ns']:.1f}")
+        emit(f"fig2a.rho{r:.1f}.des_p90_ns", per, f"{a['des_p90_ns']:.1f}")
+    # Cross-check rows: param-vs-DES relative deltas per anchor (percent).
+    for a in val["anchors"]:
+        r = a["rho"]
+        emit(f"fig2a.crosscheck.rho{r:.1f}.mean_delta_pct", 0.0,
+             f"{100.0 * a['mean_err']:.1f}")
+        emit(f"fig2a.crosscheck.rho{r:.1f}.p90_delta_pct", 0.0,
+             f"{100.0 * a['p90_err']:.1f}")
+        emit(f"fig2a.crosscheck.rho{r:.1f}.stdev_delta_pct", 0.0,
+             f"{100.0 * a['stdev_err']:.1f}")
+    emit("fig2a.crosscheck.max_abs_mean_err_pct", 0.0,
+         f"{100.0 * val['max_abs_mean_err']:.1f}")
+    emit("fig2a.crosscheck.max_abs_p90_err_pct", 0.0,
+         f"{100.0 * val['max_abs_p90_err']:.1f}")
     emit("fig2a.anchor.3x_at_50pct", 0.0,
          f"{float(queueing.avg_latency_ns(0.5)) / 40.0:.2f}")
     emit("fig2a.anchor.4x_at_60pct", 0.0,

@@ -2,10 +2,14 @@
 
 Submodules:
   hw         -- hardware constants (paper world + TPU v5e world)
-  queueing   -- calibrated load->latency models (Fig 2a)
-  memsim     -- mechanistic discrete-event memory simulator (lax.scan)
+  queueing   -- calibrated load->latency models (Fig 2a) + closed-form
+                anchors for the DES cross-check
+  memsim     -- mechanistic discrete-event memory simulator (lax.scan);
+                every ChannelConfig field is a named sweep axis
   workloads  -- Table 4's 35 workloads + behavioral parameters
   cpu_model  -- fixed-point loaded-CPU model (the ChampSim stand-in)
-  coaxial    -- design points, evaluation engine, EDP/area reports
+  sweepspec  -- named-axis sweep specs (cpu + memsim lowering)
+  coaxial    -- design points, evaluation engine, distribution sweeps,
+                DES<->closed-form validation, EDP/area reports
   planner    -- the TPU adaptation: queue-aware channelized-sharding planner
 """

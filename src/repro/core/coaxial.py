@@ -40,14 +40,17 @@ import functools
 
 import numpy as np
 
-from repro.core import cpu_model, hw
+from repro.core import cpu_model, hw, memsim, queueing
 from repro.core.cpu_model import (COAXIAL_2X, COAXIAL_4X, COAXIAL_5X,
                                   COAXIAL_ASYM, DDR_BASELINE, DESIGNS,
                                   MemSystem, ModelResult, design_gradient,
                                   geomean, solve, solve_batch)
-from repro.core.sweepspec import (KIND_DESIGN, KIND_IFACE, KIND_N_ACTIVE,
+from repro.core.memsim import ChannelConfig, LatencyStats
+from repro.core.sweepspec import (KIND_CHANNEL_FIELD, KIND_DESIGN,
+                                  KIND_IFACE, KIND_N_ACTIVE,
                                   KIND_WORKLOAD_FIELD, Axis, SweepSpec,
-                                  build_flat, sweep_spec)
+                                  build_flat, build_flat_memsim,
+                                  distribution_spec, sweep_spec)
 from repro.core.workloads import NAMES, WORKLOADS
 
 __all__ = [
@@ -56,7 +59,9 @@ __all__ = [
     "Axis", "SweepSpec", "sweep_spec", "solve_spec", "design_gradient",
     "default_sweep", "register_design", "unregister_design", "get_design",
     "all_designs", "area_report", "pin_report", "design_cost", "edp_report",
-    "sensitivity_latency", "sensitivity_cores",
+    "sensitivity_latency", "sensitivity_cores", "ChannelConfig",
+    "LatencyStats", "DistributionSweepResult", "distribution_spec",
+    "distribution_sweep", "validate_calibration",
 ]
 
 
@@ -174,8 +179,32 @@ class Comparison:
 _UNSET = object()
 
 
+class _NamedAxes:
+    """Shared axis plumbing for named-axis result containers (the
+    model-sweep and distribution-sweep results both carry an ``axes``
+    tuple and resolve coordinates the same way)."""
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(ax) for ax in self.axes)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(ax.name for ax in self.axes)
+
+    def _axis_pos(self, name: str) -> int:
+        for p, ax in enumerate(self.axes):
+            if ax.name == name:
+                return p
+        raise KeyError(f"no axis {name!r} in sweep; axes: "
+                       f"{list(self.axis_names)}")
+
+    def axis(self, name: str) -> Axis:
+        return self.axes[self._axis_pos(name)]
+
+
 @dataclasses.dataclass(frozen=True)
-class SweepResult:
+class SweepResult(_NamedAxes):
     """Stacked model results over a grid of named axes.
 
     ``results`` arrays have shape ``spec shape + (n_workloads,)``; the
@@ -197,26 +226,6 @@ class SweepResult:
     #: Length-1 axes recording the coordinates :meth:`sel` pinned, so the
     #: baseline reference and cost accounting keep honouring them.
     pinned: tuple[Axis, ...] = ()
-
-    # -- axis plumbing ----------------------------------------------------
-
-    @property
-    def shape(self) -> tuple[int, ...]:
-        return tuple(len(ax) for ax in self.axes)
-
-    @property
-    def axis_names(self) -> tuple[str, ...]:
-        return tuple(ax.name for ax in self.axes)
-
-    def _axis_pos(self, name: str) -> int:
-        for p, ax in enumerate(self.axes):
-            if ax.name == name:
-                return p
-        raise KeyError(f"no axis {name!r} in sweep; axes: "
-                       f"{list(self.axis_names)}")
-
-    def axis(self, name: str) -> Axis:
-        return self.axes[self._axis_pos(name)]
 
     # -- legacy positional views (the historical D/L/C triple) ------------
 
@@ -600,6 +609,179 @@ def sensitivity_cores(cores=(1, 4, 8, 12), sys: MemSystem = COAXIAL_4X):
     sys = _unshadow(sys)
     sw = sweep((DDR_BASELINE, sys), n_active_grid=tuple(cores))
     return {n: sw.comparison(sys, n_active=n) for n in cores}
+
+
+# ---------------------------------------------------------------------------
+# Distribution sweeps: the DES (memsim) as a first-class sweep target.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistributionSweepResult(_NamedAxes):
+    """Stacked DES latency distributions over a grid of named channel axes.
+
+    ``stats`` leaves have the grid shape (``hist`` with one trailing bin
+    axis); the axes name each dimension.  Cells are selected by
+    coordinate, never by position, with the same tolerant numeric
+    matching and KeyError UX as :class:`SweepResult`:
+    ``sw.sel(rho=0.6, kappa=2.0, cxl_lat_ns=30.0)`` returns the cell's
+    :class:`LatencyStats` once every axis is pinned, or a reduced sweep
+    over the remaining axes otherwise.
+    """
+
+    axes: tuple[Axis, ...]
+    stats: LatencyStats
+    base: ChannelConfig
+    steps: int
+    warmup: int
+    seed: int
+    reps: int = 1
+
+    def sel(self, **coords):
+        """Select coordinates by axis name; each selected axis is dropped.
+
+        Numeric coordinates match tolerantly (``rho=0.6`` finds a
+        linspace-rounded ``0.6000000001`` cell); an unknown axis or
+        coordinate raises one clear :class:`KeyError` listing the valid
+        choices.  Returns the cell's :class:`LatencyStats` when no axes
+        remain, else a reduced :class:`DistributionSweepResult`.
+        """
+        for k in coords:
+            if k not in self.axis_names:
+                raise KeyError(f"no axis {k!r} in sweep; axes: "
+                               f"{list(self.axis_names)}")
+        stats = self.stats
+        kept: list[Axis] = []
+        pos = 0
+        for ax in self.axes:
+            if ax.name in coords:
+                i = ax.index(coords[ax.name])
+                stats = stats[(slice(None),) * pos + (i,)]
+            else:
+                kept.append(ax)
+                pos += 1
+        if not kept:
+            return stats
+        return dataclasses.replace(self, axes=tuple(kept), stats=stats)
+
+    def cell(self, **coords) -> LatencyStats:
+        """The single-cell :class:`LatencyStats` at fully pinned
+        coordinates (axes of length 1 may be omitted)."""
+        full = dict(coords)
+        for ax in self.axes:
+            if ax.name not in full:
+                if len(ax) == 1:
+                    full[ax.name] = ax.values[0]
+                else:
+                    raise KeyError(
+                        f"axis {ax.name!r} has {len(ax)} coordinates; pass "
+                        f"{ax.name}=<one of {list(ax.coords)}>")
+        return self.sel(**full)
+
+    def curve(self, along: str, field: str = "mean_ns", **coords):
+        """(axis coordinates, stat values) along one axis, other axes
+        pinned by ``coords`` -- the Fig-2a load-latency curve shape."""
+        ax = self.axis(along)
+        sub = self.sel(**coords) if coords else self
+        if isinstance(sub, LatencyStats) or sub.axis_names != (along,):
+            raise KeyError(
+                f"curve(along={along!r}) needs every other axis pinned; "
+                f"axes: {list(self.axis_names)}")
+        return np.asarray(ax.values, np.float64), getattr(sub.stats, field)
+
+
+def distribution_sweep(spec: SweepSpec | None = None, *,
+                       base: ChannelConfig | None = None,
+                       steps: int = 200_000, seed: int = 0,
+                       warmup: int | None = None, reps: int = 1,
+                       **axes) -> DistributionSweepResult:
+    """Run the DES over a named-axis grid of channel parameters.
+
+    Pass a memsim-targeted :class:`SweepSpec` (from
+    :func:`distribution_spec`) or the axes directly as keywords::
+
+        sw = coaxial.distribution_sweep(rho=np.linspace(.1, .8, 8),
+                                        kappa=(1.0, 2.0),
+                                        cxl_lat_ns=(0.0, 30.0))
+        sw.sel(rho=0.6, kappa=2.0, cxl_lat_ns=30.0).p90_ns
+
+    However many axes the grid has, it lowers to ONE jitted ``lax.scan``
+    over the flattened cell batch (``reps`` independent replicas per cell
+    are merged into the histograms for variance reduction -- lanes are
+    nearly free next to the scan's step dispatch).  ``base`` supplies
+    every unbound channel field (default: a plain DDR channel at the
+    field defaults).
+    """
+    if spec is None:
+        spec = distribution_spec(**axes)
+    elif axes:
+        raise TypeError("pass a spec OR axis keywords, not both")
+    flat = build_flat_memsim(spec, base=base)
+    warmup = memsim.default_warmup(steps) if warmup is None else int(warmup)
+    stats = memsim.simulate_cells(
+        flat["cha"], overrides=flat["overrides"], steps=steps, seed=seed,
+        warmup=warmup, reps=reps)
+    return DistributionSweepResult(
+        axes=spec.axes, stats=stats.reshape(*spec.shape),
+        base=base if base is not None else ChannelConfig(rho=0.5),
+        steps=steps, warmup=warmup, seed=seed, reps=reps)
+
+
+#: Default rho anchors for the DES <-> closed-form cross-check.
+CALIBRATION_RHOS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
+#: Cross-check tolerances: relative mean / p90 deviation per anchor.
+CALIBRATION_MEAN_TOL = 0.15
+CALIBRATION_P90_TOL = 0.20
+
+
+def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
+                         cxl_lat_ns: float = 0.0, steps: int = 200_000,
+                         seed: int = 0, warmup: int | None = None,
+                         reps: int = 48,
+                         mean_tol: float = CALIBRATION_MEAN_TOL,
+                         p90_tol: float = CALIBRATION_P90_TOL) -> dict:
+    """Cross-validate the DES against the closed-form queueing model.
+
+    The two halves of the reproduction -- ``queueing``'s calibrated
+    closed form and ``memsim``'s mechanistic DES -- must tell the same
+    story.  This runs ONE batched distribution sweep over the rho anchors
+    and compares DES mean / p90 / stdev against
+    :func:`queueing.closed_form_stats` at every anchor.
+
+    Returns ``anchors`` (one row per rho with both values and the
+    relative deltas), ``max_abs_mean_err`` / ``max_abs_p90_err``, the
+    tolerances, an overall ``ok`` flag, and the ``sweep`` itself for
+    further slicing.  Benchmarks surface the per-anchor deltas as
+    ``fig2a.crosscheck.*`` rows so calibration drift shows up in CI.
+    """
+    rhos = tuple(float(r) for r in rhos)
+    base = ChannelConfig(rho=0.5, kappa=float(kappa),
+                         cxl_lat_ns=float(cxl_lat_ns))
+    sw = distribution_sweep(distribution_spec(rho=rhos), base=base,
+                            steps=steps, seed=seed, warmup=warmup,
+                            reps=reps)
+    anchors = []
+    for r in rhos:
+        des = sw.sel(rho=r)
+        cf = {k: float(v) for k, v in queueing.closed_form_stats(
+            r, kappa=kappa, cxl_lat_ns=cxl_lat_ns).items()}
+        row = dict(rho=r,
+                   des_mean_ns=float(des.mean_ns),
+                   closed_mean_ns=cf["mean_ns"],
+                   mean_err=float(des.mean_ns) / cf["mean_ns"] - 1.0,
+                   des_p90_ns=float(des.p90_ns),
+                   closed_p90_ns=cf["p90_ns"],
+                   p90_err=float(des.p90_ns) / cf["p90_ns"] - 1.0,
+                   des_stdev_ns=float(des.stdev_ns),
+                   closed_stdev_ns=cf["stdev_ns"],
+                   stdev_err=float(des.stdev_ns) / cf["stdev_ns"] - 1.0)
+        anchors.append(row)
+    max_mean = max(abs(a["mean_err"]) for a in anchors)
+    max_p90 = max(abs(a["p90_err"]) for a in anchors)
+    return dict(anchors=anchors, max_abs_mean_err=max_mean,
+                max_abs_p90_err=max_p90, mean_tol=mean_tol,
+                p90_tol=p90_tol,
+                ok=bool(max_mean <= mean_tol and max_p90 <= p90_tol),
+                sweep=sw)
 
 
 # ---------------------------------------------------------------------------

@@ -13,14 +13,29 @@ Model per channel:
     burst-state rate is ``kappa`` times the average, idle fills the rest;
   * service: the channel serializes one 64B line per ``t_xfer`` ns *on
     average* (38.4 GB/s -> 1.67 ns), but the effective per-request service
-    is heavy-tailed: with small probability the controller blocks for a long
-    time (refresh, tFAW windows, read/write turnaround trains).  The
-    two-point service distribution is calibrated so the M/G/1 mean wait
-    lambda*E[S^2] / (2*(1-rho)) reproduces the paper's Fig 2a anchor
-    W(0.5) ~= 80 ns while keeping E[S] = t_xfer (so rho keeps its meaning
-    as bus utilization);
+    is heavy-tailed: with small probability the controller blocks for a
+    two-slope power-law (truncated-Pareto) duration spanning the
+    bank-conflict / turnaround-train scale (tens of ns) through tFAW
+    windows up to refresh (tRFC, ~1 us).  The blocking-size law is what
+    the paper's own Fig-2a closed forms demand: inverting mean and p90
+    through Pollaczek-Khinchine yields a service-excess tail
+    P(S > w) ~ w**-1.8.  Calibration keeps E[S] = t_xfer (so rho keeps
+    its meaning as bus utilization) and matches the M/G/1 mean-wait
+    anchor W(0.5) ~= 80 ns
+    (``coaxial.validate_calibration`` checks mean AND p90 per anchor);
   * DRAM access: base latency plus uniform bank/row-state jitter;
   * CXL: a fixed interface premium plus the link-traversal time.
+
+Every calibration constant is also a per-channel *field* of
+:class:`ChannelConfig` / :class:`ChannelArrays` (the module-level constants
+are just the defaults), so any of them can be a named sweep axis:
+``sweepspec.distribution_spec(rho=..., kappa=..., stall_ns=...)`` lowers to
+ONE jitted scan over the flattened cell batch, with NaN-masked overrides
+applied branch-free in-trace exactly like ``cpu_model``'s design overrides.
+
+The first ``warmup`` ns (default ``steps // 10``) are excluded from the
+histogram: the simulation starts with an empty queue, so without a warmup
+window the cold-start transient biases means and low-rho quantiles down.
 
 All randomness is threefry-derived from an explicit seed: runs are exactly
 reproducible.
@@ -29,7 +44,7 @@ reproducible.
 from __future__ import annotations
 
 import dataclasses
-import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,113 +54,266 @@ from repro.core import hw
 
 #: Histogram binning for latency distributions.
 BIN_NS = 4.0
-N_BINS = 640          # covers 0 .. 2560 ns
+N_BINS = 1024         # covers 0 .. 4096 ns
 
 #: DRAM access latency jitter (bank/row-buffer state), uniform half-width.
-SERVICE_JITTER_NS = 14.0
+SERVICE_JITTER_NS = 13.5
 #: Fraction of time the MMPP spends in the burst state.
 BURST_DUTY = 0.3
 #: Mean sojourn time in each MMPP state (ns).
 BURST_SOJOURN_NS = 2000.0
-#: Heavy-tail service events: probability and duration (ns).  With
-#: E[S] = 1.667 ns these give E[S^2] ~= 265 ns^2, hence an M/G/1 wait of
-#: ~80 ns at 50% utilization -- the paper's calibration anchor.
-STALL_PROB = 0.0097
-STALL_NS = 165.0
+#: Controller blocking episodes (the heavy service tail): with probability
+#: ``STALL_PROB`` per request the controller blocks for a two-slope
+#: power-law (Pareto) duration -- slope ``STALL_ALPHA`` from the
+#: bank-conflict scale (``STALL_NS``) to the tFAW / turnaround-train
+#: scale (``STALL_BREAK_NS``), rolling off at slope ``STALL_ALPHA2`` out
+#: to the refresh/tRFC scale, capped at ``STALL_MAX_NS``.  The power law
+#: is not a modeling whim: inverting the paper's two Fig-2a closed forms
+#: (mean 40 + 80x, p90 40 + 148*x**1.232, x = rho/(1-rho)) through the
+#: M/G/1 Pollaczek-Khinchine relation forces the service-excess tail to
+#: follow P(S > w) ~ w**-1.8 across the whole 30..800 ns range -- a
+#: straight line in log-log that no small discrete mixture can track --
+#: and the exact stationary solve of the simulator's own Lindley chain
+#: fixes the two slopes so that multi-event compounding lands the DES on
+#: BOTH closed forms at every load anchor (mean within ~9%, p90 within
+#: ~12%, for rho in [0.1, 0.8]).  E[S] stays exactly t_xfer (so rho
+#: keeps its meaning as bus utilization) and E[S^2] ~= 267 ns^2 keeps
+#: the mean-wait anchor W(0.5) ~= 80 ns;
+#: ``coaxial.validate_calibration`` pins mean AND p90 per anchor.
+STALL_PROB = 0.01923
+STALL_NS = 37.0
+STALL_ALPHA = 2.138
+STALL_BREAK_NS = 353.6
+STALL_ALPHA2 = 1.3495
+STALL_MAX_NS = 1903.7
+#: Floor on the non-penalized per-request service time (ns).
+MIN_SERVICE_NS = 0.05
+
+#: Default warmup fraction: the leading ``steps // WARMUP_DIV`` ns are
+#: simulated but not recorded.
+WARMUP_DIV = 10
 
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
-    """One simulated memory channel configuration."""
+    """One simulated memory channel configuration.
+
+    Every field -- the operating point AND the calibration constants -- is
+    sweepable; the module-level constants are only defaults.
+    """
 
     rho: float                  # target bus utilization, 0..~0.95
     kappa: float = 1.0          # burst peak-to-mean arrival ratio
     t_xfer_ns: float = hw.CACHE_LINE_B / hw.DDR5_CH_BW_GBPS
     service_ns: float = hw.DRAM_SERVICE_NS - 2.0   # pipelined access part
     cxl_lat_ns: float = 0.0     # CXL interface premium (0 => direct DDR)
+    burst_duty: float = BURST_DUTY
+    burst_sojourn_ns: float = BURST_SOJOURN_NS
+    stall_prob: float = STALL_PROB
+    stall_ns: float = STALL_NS
+    stall_alpha: float = STALL_ALPHA
+    stall_break_ns: float = STALL_BREAK_NS
+    stall_alpha2: float = STALL_ALPHA2
+    stall_max_ns: float = STALL_MAX_NS
+    service_jitter_ns: float = SERVICE_JITTER_NS
 
 
-def _config_arrays(configs):
-    f = lambda a: jnp.asarray([getattr(c, a) for c in configs], jnp.float32)
-    return (f("rho"), f("kappa"), f("t_xfer_ns"), f("service_ns"),
-            f("cxl_lat_ns"))
+class ChannelArrays(NamedTuple):
+    """Pytree of per-channel simulation parameters, ``(N,)`` float leaves.
+
+    Mirrors :class:`cpu_model.MemSystemArrays`: :class:`ChannelConfig` is
+    the frozen-dataclass façade for humans, this is what the jitted scan
+    consumes -- one leading cell axis shared by every leaf, so any named-
+    axis grid flattens to one batch.
+    """
+
+    rho: jnp.ndarray
+    kappa: jnp.ndarray
+    t_xfer_ns: jnp.ndarray
+    service_ns: jnp.ndarray
+    cxl_lat_ns: jnp.ndarray
+    burst_duty: jnp.ndarray
+    burst_sojourn_ns: jnp.ndarray
+    stall_prob: jnp.ndarray
+    stall_ns: jnp.ndarray
+    stall_alpha: jnp.ndarray
+    stall_break_ns: jnp.ndarray
+    stall_alpha2: jnp.ndarray
+    stall_max_ns: jnp.ndarray
+    service_jitter_ns: jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _simulate(rho, kappa, t_xfer, service, cxl_lat, seed, steps: int):
-    """Run ``steps`` ns for a batch of channels; return latency histograms."""
-    n = rho.shape[0]
-    rate_avg = rho / t_xfer                      # arrivals per ns
-    rate_hi = jnp.minimum(kappa * rate_avg, 0.98)
+#: Channel fields a distribution-sweep axis may bind (all of them).
+CHANNEL_FIELDS = ChannelArrays._fields
+
+
+def stack_channels(configs) -> ChannelArrays:
+    """Stack :class:`ChannelConfig` façades into one ``(N,)``-leaved pytree."""
+    return ChannelArrays(*(
+        jnp.asarray([float(getattr(c, f)) for c in configs], jnp.float32)
+        for f in CHANNEL_FIELDS))
+
+
+def _apply_channel_overrides(cha: ChannelArrays, ov) -> ChannelArrays:
+    """NaN-masked per-field substitution, applied branch-free in-trace."""
+    return cha._replace(**{
+        f: jnp.where(jnp.isnan(v), getattr(cha, f), v)
+        for f, v in ov.items()})
+
+
+#: Number of times the jitted simulator has been TRACED (not called).  A
+#: trace only happens on a new (cell count, steps) pair, so a whole
+#: named-axis distribution grid bumps this by exactly one; tests pin that.
+_TRACE_COUNT = [0]
+
+
+def sim_trace_count() -> int:
+    return _TRACE_COUNT[0]
+
+
+def _pareto_seg(ratio, a):
+    """Per-unit-survival mean of one power-law segment.
+
+    ``integral of (x0/x)**a from x0 to x1, divided by x0`` with
+    ``ratio = x0/x1``: ``(1 - ratio**(a-1)) / (a-1)``, whose ``a -> 1``
+    limit is ``-log(ratio)``.  Branch-free so a ``stall_alpha`` axis may
+    sweep through 1.0 without the 0/0 turning the cell into silent NaN
+    garbage.
+    """
+    d = a - 1.0
+    near_one = jnp.abs(d) < 1e-4
+    safe = jnp.where(near_one, 1.0, d)
+    return jnp.where(near_one, -jnp.log(ratio), (1.0 - ratio ** safe) / safe)
+
+
+def _sim_core(cha: ChannelArrays, ov, keys, record):
+    """Run ``len(keys)`` ns for a batch of channels; return histograms.
+
+    ``cha`` leaves are ``(N,)``; ``ov`` maps channel fields to ``(N,)``
+    NaN-masked overrides (NaN = keep the channel's own value), applied
+    inside the trace so the jit cache keys on the flattened cell count and
+    step count alone.  ``record`` is a per-step 0/1 mask (the warmup
+    window is simulated but not histogrammed).
+    """
+    _TRACE_COUNT[0] += 1  # side effect runs at trace time only
+    c = _apply_channel_overrides(cha, ov)
+    n = c.rho.shape[0]
+    rate_avg = c.rho / c.t_xfer_ns               # arrivals per ns
+    rate_hi = jnp.minimum(c.kappa * rate_avg, 0.98)
     # Rate in the idle state so the duty-weighted mean matches rate_avg.
     rate_lo = jnp.maximum(
-        (rate_avg - BURST_DUTY * rate_hi) / (1.0 - BURST_DUTY), 0.0)
-    p_leave = 1.0 / BURST_SOJOURN_NS             # state-switch prob per ns
-    # Duty-correct entry prob: stationary P(burst) = BURST_DUTY.
-    p_enter = p_leave * BURST_DUTY / (1.0 - BURST_DUTY)
+        (rate_avg - c.burst_duty * rate_hi) / (1.0 - c.burst_duty), 0.0)
+    p_leave = 1.0 / c.burst_sojourn_ns           # state-switch prob per ns
+    # Duty-correct entry prob: stationary P(burst) = burst_duty.
+    p_enter = p_leave * c.burst_duty / (1.0 - c.burst_duty)
 
-    # Two-point effective service distribution with mean exactly t_xfer.
-    s_small = (t_xfer - STALL_PROB * STALL_NS) / (1.0 - STALL_PROB)
-    s_small = jnp.maximum(s_small, 0.05)
+    # Two-slope truncated-Pareto blocking durations.  Survival:
+    # (sn/x)**a1 up to the break, then q_b * (xb/x)**a2, capped at the
+    # max.  The capped mean (closed form, computed in-trace) lets s_small
+    # absorb the blocking work so E[S] stays exactly t_xfer.
+    sn, xb = c.stall_ns, c.stall_break_ns
+    a1, a2, cap = c.stall_alpha, c.stall_alpha2, c.stall_max_ns
+    q_b = (sn / xb) ** a1                    # survival at the break
+    stall_mean = (sn + sn * _pareto_seg(sn / xb, a1) +
+                  q_b * xb * _pareto_seg(xb / cap, a2))
+    s_small = ((c.t_xfer_ns - c.stall_prob * stall_mean) /
+               (1.0 - c.stall_prob))
+    s_small = jnp.maximum(s_small, MIN_SERVICE_NS)
 
-    def step(carry, key):
+    def step(carry, xs):
+        key, rec = xs
         backlog, in_burst, hist = carry
-        k1, k2, k3, k4 = jax.random.split(key, 4)
-        switch_u = jax.random.uniform(k1, (n,))
+        # One fused threefry draw per step (fewer key derivations than
+        # split-per-stream): rows are switch / arrival / jitter /
+        # blocking-or-not / blocking size.
+        switch_u, arrive_u, jitter_u, svc_u, size_u = \
+            jax.random.uniform(key, (5, n))
         in_burst = jnp.where(
             in_burst > 0.5,
             jnp.where(switch_u < p_leave, 0.0, 1.0),
             jnp.where(switch_u < p_enter, 1.0, 0.0))
         rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
-        arrive = (jax.random.uniform(k2, (n,)) < rate).astype(jnp.float32)
-        jitter = jax.random.uniform(
-            k3, (n,), minval=-SERVICE_JITTER_NS, maxval=SERVICE_JITTER_NS)
-        latency = backlog + service + 2.0 + jitter + cxl_lat
+        arrive = (arrive_u < rate).astype(jnp.float32)
+        jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns
+        latency = backlog + c.service_ns + 2.0 + jitter + c.cxl_lat_ns
         bin_idx = jnp.clip((latency / BIN_NS).astype(jnp.int32), 0, N_BINS - 1)
-        hist = hist.at[jnp.arange(n), bin_idx].add(arrive)
-        stall = jax.random.uniform(k4, (n,)) < STALL_PROB
-        svc = jnp.where(stall, STALL_NS, s_small)
+        hist = hist.at[jnp.arange(n), bin_idx].add(arrive * rec)
+        # Inverse-CDF sample of the two-slope law: the uniform IS the
+        # survival value -- above q_b the first slope applies, below it
+        # the far tail, capped at the max.
+        u = jnp.maximum(size_u, 1e-7)
+        stall = jnp.where(u > q_b, sn * u ** (-1.0 / a1),
+                          xb * (q_b / u) ** (1.0 / a2))
+        stall = jnp.minimum(stall, cap)
+        svc = jnp.where(svc_u < c.stall_prob, stall, s_small)
         backlog = jnp.maximum(backlog + arrive * svc - 1.0, 0.0)
         return (backlog, in_burst, hist), None
 
-    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
     init = (jnp.zeros(n), jnp.ones(n), jnp.zeros((n, N_BINS)))
-    (backlog, _, hist), _ = jax.lax.scan(step, init, keys)
+    (_, _, hist), _ = jax.lax.scan(step, init, (keys, record))
     return hist
+
+
+_sim_jit = jax.jit(_sim_core)
 
 
 @dataclasses.dataclass
 class LatencyStats:
+    """Latency-distribution summary; leaves share any leading cell/grid
+    shape, with ``hist`` carrying one trailing bin axis."""
+
     mean_ns: np.ndarray
     stdev_ns: np.ndarray
     p50_ns: np.ndarray
     p90_ns: np.ndarray
     p99_ns: np.ndarray
-    hist: np.ndarray            # (configs, N_BINS) counts
+    hist: np.ndarray            # (..., N_BINS) counts
     bin_ns: float = BIN_NS
 
-    def cdf(self, i: int) -> tuple[np.ndarray, np.ndarray]:
-        """(latency_ns, cdf) arrays for config ``i`` (Fig 6b)."""
-        h = self.hist[i]
+    _ARRAY_FIELDS = ("mean_ns", "stdev_ns", "p50_ns", "p90_ns", "p99_ns",
+                     "hist")
+
+    def __getitem__(self, idx) -> "LatencyStats":
+        """Slice the leading (cell/grid) axes of every leaf identically."""
+        return LatencyStats(**{f: getattr(self, f)[idx]
+                               for f in self._ARRAY_FIELDS},
+                            bin_ns=self.bin_ns)
+
+    def reshape(self, *grid_shape) -> "LatencyStats":
+        """Reshape the leading axes; the histogram bin axis stays last."""
+        shaped = {f: getattr(self, f).reshape(grid_shape)
+                  for f in self._ARRAY_FIELDS if f != "hist"}
+        shaped["hist"] = self.hist.reshape(tuple(grid_shape) +
+                                           self.hist.shape[-1:])
+        return LatencyStats(**shaped, bin_ns=self.bin_ns)
+
+    def cdf(self, i=None) -> tuple[np.ndarray, np.ndarray]:
+        """(latency_ns, cdf) arrays for cell ``i`` (Fig 6b).
+
+        ``i`` may be omitted when the stats hold a single cell (``hist``
+        is one-dimensional), e.g. after a fully pinned
+        ``DistributionSweepResult.sel``.
+        """
+        h = self.hist if i is None else self.hist[i]
+        if h.ndim != 1:
+            raise ValueError(
+                f"cdf() needs one cell; hist has shape {h.shape} -- "
+                f"index a cell or sel() down to one")
         c = np.cumsum(h) / max(h.sum(), 1.0)
-        x = (np.arange(N_BINS) + 0.5) * self.bin_ns
+        x = (np.arange(h.shape[-1]) + 0.5) * self.bin_ns
         return x, c
 
 
-def simulate(configs, steps: int = 200_000, seed: int = 0) -> LatencyStats:
-    """Simulate a batch of :class:`ChannelConfig` and return stats."""
-    arrays = _config_arrays(configs)
-    hist = np.asarray(_simulate(*arrays, seed, steps), np.float64)
-    centers = (np.arange(N_BINS) + 0.5) * BIN_NS
-    total = hist.sum(axis=1, keepdims=True)
-    total = np.maximum(total, 1.0)
+def _stats_from_hist(hist: np.ndarray) -> LatencyStats:
+    centers = (np.arange(hist.shape[-1]) + 0.5) * BIN_NS
+    total = np.maximum(hist.sum(axis=-1, keepdims=True), 1.0)
     p = hist / total
-    mean = (p * centers).sum(axis=1)
-    var = (p * (centers[None, :] - mean[:, None]) ** 2).sum(axis=1)
-    cum = np.cumsum(p, axis=1)
+    mean = (p * centers).sum(axis=-1)
+    var = (p * (centers - mean[..., None]) ** 2).sum(axis=-1)
+    cum = np.cumsum(p, axis=-1)
 
     def quantile(q):
-        idx = np.argmax(cum >= q, axis=1)
+        idx = np.argmax(cum >= q, axis=-1)
         return (idx + 0.5) * BIN_NS
 
     return LatencyStats(
@@ -153,14 +321,76 @@ def simulate(configs, steps: int = 200_000, seed: int = 0) -> LatencyStats:
         p90_ns=quantile(0.9), p99_ns=quantile(0.99), hist=hist)
 
 
+def default_warmup(steps: int) -> int:
+    return steps // WARMUP_DIV
+
+
+def _nan_overrides(n: int) -> dict:
+    # Explicit dtype => strong-typed leaves, so the jit signature doesn't
+    # depend on WHICH fields an axis binds (bound overrides are strong
+    # float32 too) -- any axis combination of one size shares a compile.
+    nans = jnp.full((n,), jnp.nan, jnp.float32)
+    return {f: nans for f in CHANNEL_FIELDS}
+
+
+def simulate_cells(cha: ChannelArrays, *, overrides=None,
+                   steps: int = 200_000, seed: int = 0,
+                   warmup: int | None = None, reps: int = 1) -> LatencyStats:
+    """Simulate N flattened cells in one jitted scan.
+
+    ``cha`` leaves are ``(N,)``; ``overrides`` maps channel fields to
+    ``(N,)`` arrays with NaN meaning "keep the channel's own value".
+    Missing override fields are filled with NaN so the jit cache keys on
+    ``(N * reps, steps)`` alone -- any axis combination of the same
+    flattened size and step count shares one compile.  ``warmup`` ns
+    (default ``steps // 10``) are simulated but excluded from the
+    histograms.  ``reps`` runs that many independent replicas of every
+    cell in the same batch (the per-step uniforms are independent across
+    lanes) and merges their histograms -- variance reduction that costs
+    almost nothing, since the scan's step dispatch dominates over lane
+    count.
+    """
+    n = int(np.shape(cha.rho)[0])
+    reps = int(reps)
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1; got {reps}")
+    warmup = default_warmup(steps) if warmup is None else int(warmup)
+    if not 0 <= warmup < steps:
+        raise ValueError(f"warmup must be in [0, steps); got {warmup} "
+                         f"with steps={steps}")
+    tile = lambda v: jnp.tile(jnp.asarray(np.asarray(v, np.float32)), reps)
+    ov = _nan_overrides(n * reps)
+    ov.update({f: tile(v) for f, v in (overrides or {}).items()})
+    cha = ChannelArrays(*(tile(leaf) for leaf in cha))
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    record = (jnp.arange(steps) >= warmup).astype(jnp.float32)
+    hist = _sim_jit(cha, ov, keys, record)
+    hist = np.asarray(hist, np.float64).reshape(reps, n, -1).sum(axis=0)
+    return _stats_from_hist(hist)
+
+
+def simulate(configs, steps: int = 200_000, seed: int = 0,
+             warmup: int | None = None, reps: int = 1) -> LatencyStats:
+    """Simulate a batch of :class:`ChannelConfig` and return stats.
+
+    Thin shim over :func:`simulate_cells` -- bit-identical to any
+    distribution sweep whose flat cells match ``configs`` in order (same
+    seed, steps, warmup and reps => same threefry streams).
+    """
+    return simulate_cells(stack_channels(configs), steps=steps, seed=seed,
+                          warmup=warmup, reps=reps)
+
+
 def load_latency_curve(rhos=None, kappa: float = 1.0, cxl_lat_ns: float = 0.0,
-                       steps: int = 200_000, seed: int = 0) -> dict:
+                       steps: int = 200_000, seed: int = 0,
+                       warmup: int | None = None, reps: int = 1) -> dict:
     """Fig 2a: mean/p90 latency vs bus utilization for one channel type."""
     if rhos is None:
         rhos = np.linspace(0.05, 0.95, 19)
     configs = [ChannelConfig(rho=float(r), kappa=kappa,
                              cxl_lat_ns=cxl_lat_ns) for r in rhos]
-    stats = simulate(configs, steps=steps, seed=seed)
+    stats = simulate(configs, steps=steps, seed=seed, warmup=warmup,
+                     reps=reps)
     return dict(rho=np.asarray(rhos), mean_ns=stats.mean_ns,
                 p90_ns=stats.p90_ns, p99_ns=stats.p99_ns,
                 stdev_ns=stats.stdev_ns)

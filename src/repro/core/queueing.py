@@ -139,6 +139,29 @@ def stdev_latency_ns(queue_wait):
     return jnp.sqrt(SIGMA_BASE_NS**2 + (SIGMA_Q_COEF * queue_wait) ** 2)
 
 
+def closed_form_stats(rho, *, kappa=1.0, cxl_lat_ns=0.0) -> dict:
+    """The closed-form latency anchors at one operating point (ns).
+
+    The cross-validation contract between the two halves of the
+    reproduction: ``coaxial.validate_calibration`` compares the DES's
+    mean / p90 / stdev against exactly these numbers.  ``kappa``
+    generalizes both curves with the burst index of dispersion
+    (``kappa**2`` on the queueing term, degrading to the calibrated
+    Fig-2a anchors at ``kappa = 1``); ``cxl_lat_ns`` adds the fixed CXL
+    interface premium.  Vectorizes over ``rho`` like everything else
+    here.
+    """
+    wait = burst_queue_wait_ns(rho, kappa)
+    r = _clip_rho(rho)
+    x = kappa**2 * r / (1.0 - r)
+    return dict(
+        mean_ns=hw.DRAM_SERVICE_NS + wait + cxl_lat_ns,
+        p90_ns=hw.DRAM_SERVICE_NS + P90_Q_COEF_NS * x**P90_Q_EXP
+        + cxl_lat_ns,
+        stdev_ns=stdev_latency_ns(wait),
+    )
+
+
 def link_queue_wait_ns(rho_link, service_ns, kappa=1.0):
     """Queue wait at a serial (CXL/PCIe) link with given per-request service.
 
