@@ -43,6 +43,12 @@ def main():
          f"{100.0 * val['max_abs_mean_err']:.1f}")
     emit("fig2a.crosscheck.max_abs_p90_err_pct", 0.0,
          f"{100.0 * val['max_abs_p90_err']:.1f}")
+    # NOTE: this bench sweeps rho up to 0.9 for the curve; the gated
+    # cross-check envelope (val["ok"]) covers rho <= 0.8, so only the
+    # per-anchor and max-delta rows are emitted here -- the gate itself
+    # is enforced at the validated anchors in tests.
+    emit("fig2a.crosscheck.max_abs_stdev_err_pct", 0.0,
+         f"{100.0 * val['max_abs_stdev_err']:.1f}")
     emit("fig2a.anchor.3x_at_50pct", 0.0,
          f"{float(queueing.avg_latency_ns(0.5)) / 40.0:.2f}")
     emit("fig2a.anchor.4x_at_60pct", 0.0,

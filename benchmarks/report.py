@@ -114,6 +114,18 @@ def coaxial_table() -> str:
     return "\n".join(lines)
 
 
+def drift_table() -> str:
+    """Closed-form vs memsim-backed headline numbers, one row per
+    headline -- the "mechanism replaces closed form" drift experiment."""
+    from benchmarks.drift_headline import drift_rows, drift_sweep
+    lines = ["| headline | closed form | memsim-backed | drift |",
+             "|---|---|---|---|"]
+    for r in drift_rows(drift_sweep()):
+        lines.append(f"| {r['metric']} | {r['closed']:.3f} | "
+                     f"{r['memsim']:.3f} | {r['drift_pct']:+.1f}% |")
+    return "\n".join(lines)
+
+
 def pareto_table() -> str:
     """The channels x LLC area-vs-speedup frontier (named-axis sweep),
     knee point flagged -- the design the frontier says to buy."""
@@ -138,7 +150,7 @@ def main():
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "coaxial",
-                             "pareto"])
+                             "pareto", "drift"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
     args = ap.parse_args()
@@ -160,6 +172,10 @@ def main():
     if args.section in ("all", "pareto"):
         print("### Channels x LLC Pareto frontier\n")
         print(pareto_table())
+        print()
+    if args.section in ("all", "drift"):
+        print("### Closed form vs mechanism (headline drift)\n")
+        print(drift_table())
 
 
 if __name__ == "__main__":

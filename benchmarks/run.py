@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.table5_edp",
     "benchmarks.sweep_grid",
     "benchmarks.pareto_frontier",
+    "benchmarks.drift_headline",
     "benchmarks.stream_kernels",
     "benchmarks.channelized_decode",
     "benchmarks.roofline",

@@ -43,14 +43,18 @@ import numpy as np
 from repro.core import cpu_model, hw, memsim, queueing
 from repro.core.cpu_model import (COAXIAL_2X, COAXIAL_4X, COAXIAL_5X,
                                   COAXIAL_ASYM, DDR_BASELINE, DESIGNS,
-                                  MemSystem, ModelResult, design_gradient,
-                                  geomean, solve, solve_batch)
+                                  QUEUE_MODELS, MemSystem, ModelResult,
+                                  design_gradient, geomean, solve,
+                                  solve_batch)
 from repro.core.memsim import ChannelConfig, LatencyStats
+from repro.core.queuelut import (QueueLUT, build_queue_lut,
+                                 default_queue_lut)
 from repro.core.sweepspec import (KIND_CHANNEL_FIELD, KIND_DESIGN,
                                   KIND_IFACE, KIND_N_ACTIVE,
-                                  KIND_WORKLOAD_FIELD, Axis, SweepSpec,
-                                  build_flat, build_flat_memsim,
-                                  distribution_spec, sweep_spec)
+                                  KIND_QUEUE_MODEL, KIND_WORKLOAD_FIELD,
+                                  Axis, SweepSpec, build_flat,
+                                  build_flat_memsim, distribution_spec,
+                                  sweep_spec)
 from repro.core.workloads import NAMES, WORKLOADS
 
 __all__ = [
@@ -61,7 +65,8 @@ __all__ = [
     "all_designs", "area_report", "pin_report", "design_cost", "edp_report",
     "sensitivity_latency", "sensitivity_cores", "ChannelConfig",
     "LatencyStats", "DistributionSweepResult", "distribution_spec",
-    "distribution_sweep", "validate_calibration",
+    "distribution_sweep", "validate_calibration", "QUEUE_MODELS",
+    "QueueLUT", "build_queue_lut", "default_queue_lut",
 ]
 
 
@@ -226,6 +231,12 @@ class SweepResult(_NamedAxes):
     #: Length-1 axes recording the coordinates :meth:`sel` pinned, so the
     #: baseline reference and cost accounting keep honouring them.
     pinned: tuple[Axis, ...] = ()
+    #: Queue-wait backend the grid was solved under; when a
+    #: ``queue_model`` AXIS is present it overrides this scalar per cell.
+    queue_model: str = "closed_form"
+    #: Resolved :class:`QueueLUT` (memsim backend only) so the baseline
+    #: reference re-solves against the same surface.
+    lut: object = dataclasses.field(default=None, repr=False, compare=False)
 
     # -- legacy positional views (the historical D/L/C triple) ------------
 
@@ -311,6 +322,21 @@ class SweepResult(_NamedAxes):
         sweep over the remaining axes; the selected coordinates stay
         pinned, so :meth:`speedup_grid` / :meth:`pareto` keep comparing
         and costing the reduced grid at those coordinates.
+
+        Example::
+
+            >>> from repro.core import coaxial
+            >>> sw = coaxial.sweep((coaxial.DDR_BASELINE,
+            ...                     coaxial.COAXIAL_4X),
+            ...                    iface_lat_grid=(None, 50.0))
+            >>> sub = sw.sel(design="coaxial-4x", iface_lat_ns=50.0)
+            >>> sub.axis_names           # selected axes are dropped
+            ('n_active',)
+            >>> sub.results.ipc.shape    # one cell x 35 workloads
+            (1, 35)
+            >>> sw.sel(design="coaxial-4x", iface_lat_ns=50
+            ...        ).results.ipc.shape    # tolerant numeric lookup
+            (1, 35)
         """
         design = self._design_ctx(coords)
         res = self.results
@@ -393,27 +419,46 @@ class SweepResult(_NamedAxes):
         pinned to the plain baseline): the fixed reference column for
         :meth:`speedup_grid` and :meth:`pareto`.
 
-        The baseline only varies along ``n_active`` and workload axes (and
-        the iface axis if the baseline itself is CXL), so only those are
-        solved -- sel()-pinned coordinates included -- and the result is
-        broadcast across the rest of the grid.
+        The baseline only varies along ``n_active``, workload and
+        ``queue_model`` axes (and the iface axis if the baseline itself
+        is CXL), so only those are solved -- sel()-pinned coordinates
+        included -- and the result is broadcast across the rest of the
+        grid.  A queue-model axis is a per-backend re-solve (each backend
+        gets its own reference: a memsim-backed cell is compared against
+        the memsim-backed baseline, never across models).
         """
         base = self.baseline_sys
-        varying = (KIND_N_ACTIVE, KIND_WORKLOAD_FIELD) + (
+        varying = (KIND_N_ACTIVE, KIND_WORKLOAD_FIELD, KIND_QUEUE_MODEL) + (
             (KIND_IFACE,) if base.is_cxl else ())
         live = [ax for ax in self.axes if ax.kind in varying]
         pins = [ax for ax in self.pinned if ax.kind in varying]
+        qax = next((ax for ax in live + pins
+                    if ax.kind == KIND_QUEUE_MODEL), None)
+        solve_live = [ax for ax in live if ax.kind != KIND_QUEUE_MODEL]
+        solve_pins = [ax for ax in pins if ax.kind != KIND_QUEUE_MODEL]
         spec = SweepSpec((Axis("design", (base,), KIND_DESIGN),
-                          *live, *pins))
+                          *solve_live, *solve_pins))
         flat = build_flat(spec, pin_design=base)
-        res = cpu_model.solve_cells(
-            flat["sysa"], n_active=flat["n_active"],
-            iface_override_ns=flat["iface_override_ns"],
-            workload_overrides=flat["workload_overrides"],
-            baseline=base, workloads=self.workloads)
-        w = res.ipc.shape[-1]
+        backends = (tuple(qax.values) if qax is not None
+                    else (self.queue_model,))
+        cells = []
+        for qm in backends:
+            res = cpu_model.solve_cells(
+                flat["sysa"], n_active=flat["n_active"],
+                iface_override_ns=flat["iface_override_ns"],
+                workload_overrides=flat["workload_overrides"],
+                baseline=base, workloads=self.workloads,
+                queue_model=qm, lut=self.lut)
+            w = res.ipc.shape[-1]
+            cells.append(res.ipc.reshape(
+                tuple(len(ax) for ax in solve_live) + (w,)))
+        if qax is not None and qax in live:
+            # Stack the per-backend references at the axis' live position.
+            ipc = np.stack(cells, axis=live.index(qax))
+        else:
+            ipc = cells[0]
+        w = ipc.shape[-1]
         # Broadcastable view: live-axis lengths in grid position, 1 elsewhere.
-        ipc = res.ipc.reshape(tuple(len(ax) for ax in live) + (w,))
         bshape = tuple(len(ax) if ax.kind in varying else 1
                        for ax in self.axes) + (w,)
         return ipc.reshape(bshape)
@@ -465,6 +510,19 @@ class SweepResult(_NamedAxes):
         each a dict of the cell's named coordinates plus ``rel_area``,
         ``rel_pins`` and ``geomean_speedup`` (vs the un-overridden
         baseline).
+
+        Example::
+
+            >>> from repro.core import coaxial
+            >>> sw = coaxial.sweep((coaxial.DDR_BASELINE,
+            ...                     coaxial.COAXIAL_2X,
+            ...                     coaxial.COAXIAL_4X))
+            >>> front = sw.pareto(cost="rel_area")
+            >>> [round(p["rel_area"], 3) for p in front] == sorted(
+            ...     round(p["rel_area"], 3) for p in front)
+            True
+            >>> front[-1]["design"]      # max speedup ends the frontier
+            'coaxial-4x'
         """
         costs = self.design_cost_grid()
         if cost not in costs:
@@ -491,13 +549,19 @@ class SweepResult(_NamedAxes):
 
 
 def solve_spec(spec: SweepSpec, *, workloads=WORKLOADS,
-               baseline: MemSystem = DDR_BASELINE) -> SweepResult:
+               baseline: MemSystem = DDR_BASELINE,
+               queue_model: str = "closed_form",
+               lut=None) -> SweepResult:
     """Solve a named-axis :class:`SweepSpec` in one jitted, vmapped pass.
 
     The baseline is prepended to the design axis if absent so comparisons
     can always be sliced; two different designs sharing a name are
     rejected (results are name-keyed).  However many axes the spec
-    declares, the grid costs ONE XLA trace per flattened cell count.
+    declares, the grid costs ONE XLA trace per flattened cell count --
+    per backend: ``queue_model`` picks the fixed point's queue-wait
+    backend for the whole grid, and a ``queue_model`` AXIS in the spec
+    solves one such pass per backend and stacks them (the only
+    non-array axis, since the backend is a trace-level choice).
     """
     axes = list(spec.axes)
     try:
@@ -517,6 +581,30 @@ def solve_spec(spec: SweepSpec, *, workloads=WORKLOADS,
             raise ValueError(
                 f"two different designs named {d.name!r} in one sweep")
     axes[p] = Axis("design", tuple(seen.values()), KIND_DESIGN)
+    qpos = [i for i, ax in enumerate(axes) if ax.kind == KIND_QUEUE_MODEL]
+    if len(qpos) > 1:
+        raise ValueError("at most one queue_model axis per sweep")
+    if qpos:
+        if queue_model != "closed_form":
+            raise ValueError(
+                "pass the backend either as a queue_model axis or as the "
+                "queue_model argument, not both")
+        q = qpos[0]
+        qax = axes.pop(q)
+        sub = SweepSpec(tuple(axes))
+        subs = [solve_spec(sub, workloads=workloads, baseline=baseline,
+                           queue_model=qm, lut=lut)
+                for qm in qax.values]
+        res = ModelResult(**{
+            f.name: np.stack([getattr(s.results, f.name) for s in subs],
+                             axis=q)
+            for f in dataclasses.fields(ModelResult)})
+        first = subs[0]
+        return dataclasses.replace(
+            first, axes=first.axes[:q] + (qax,) + first.axes[q:],
+            results=res,
+            lut=next((s.lut for s in subs if s.lut is not None), None))
+    lut = cpu_model.resolve_queue_lut(queue_model, lut)
     spec = SweepSpec(tuple(axes))
     flat = build_flat(spec)
     res = cpu_model.solve_cells(
@@ -524,16 +612,19 @@ def solve_spec(spec: SweepSpec, *, workloads=WORKLOADS,
         iface_override_ns=flat["iface_override_ns"],
         design_overrides=flat["design_overrides"],
         workload_overrides=flat["workload_overrides"],
-        baseline=baseline, workloads=workloads)
+        baseline=baseline, workloads=workloads,
+        queue_model=queue_model, lut=lut)
     return SweepResult(
         axes=spec.axes, names=tuple(w.name for w in workloads),
         results=res.reshape(*spec.shape), baseline_name=baseline.name,
-        workloads=tuple(workloads), baseline_sys=baseline)
+        workloads=tuple(workloads), baseline_sys=baseline,
+        queue_model=queue_model, lut=lut)
 
 
 def sweep(designs=None, *, iface_lat_grid=(None,),
           n_active_grid=(hw.SIM_CORES,), workloads=WORKLOADS,
-          baseline: MemSystem = DDR_BASELINE) -> SweepResult:
+          baseline: MemSystem = DDR_BASELINE,
+          queue_model: str = "closed_form", lut=None) -> SweepResult:
     """Solve the historical designs x latencies x cores grid.
 
     Thin shim over :func:`solve_spec` -- the positional triple is just the
@@ -542,12 +633,15 @@ def sweep(designs=None, *, iface_lat_grid=(None,),
     ``iface_lat_grid`` entries override the CXL premium of CXL designs
     (``None`` = each design's own value).  ``n_active_grid`` are active
     core counts; calibration is redone per core count, as in the paper.
+    ``queue_model="memsim"`` solves the same grid through the DES-derived
+    :class:`QueueLUT` instead of the closed form.
     """
     spec = sweep_spec(
         design=tuple(designs) if designs is not None else all_designs(),
         iface_lat_ns=tuple(iface_lat_grid),
         n_active=tuple(n_active_grid))
-    return solve_spec(spec, workloads=workloads, baseline=baseline)
+    return solve_spec(spec, workloads=workloads, baseline=baseline,
+                      queue_model=queue_model, lut=lut)
 
 
 @functools.lru_cache(maxsize=None)
@@ -697,19 +791,30 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
     """Run the DES over a named-axis grid of channel parameters.
 
     Pass a memsim-targeted :class:`SweepSpec` (from
-    :func:`distribution_spec`) or the axes directly as keywords::
-
-        sw = coaxial.distribution_sweep(rho=np.linspace(.1, .8, 8),
-                                        kappa=(1.0, 2.0),
-                                        cxl_lat_ns=(0.0, 30.0))
-        sw.sel(rho=0.6, kappa=2.0, cxl_lat_ns=30.0).p90_ns
-
+    :func:`distribution_spec`) or the axes directly as keywords.
     However many axes the grid has, it lowers to ONE jitted ``lax.scan``
     over the flattened cell batch (``reps`` independent replicas per cell
     are merged into the histograms for variance reduction -- lanes are
     nearly free next to the scan's step dispatch).  ``base`` supplies
     every unbound channel field (default: a plain DDR channel at the
     field defaults).
+
+    Example (doctest-sized step budget; real sweeps use the 200k
+    default)::
+
+        >>> from repro.core import coaxial
+        >>> sw = coaxial.distribution_sweep(rho=(0.2, 0.6),
+        ...                                 cxl_lat_ns=(0.0, 30.0),
+        ...                                 steps=20_000, reps=2)
+        >>> sw.shape                     # ONE lax.scan for the 4 cells
+        (2, 2)
+        >>> cell = sw.sel(rho=0.6, cxl_lat_ns=30.0)   # -> LatencyStats
+        >>> bool(cell.p90_ns >= cell.p50_ns)
+        True
+        >>> loaded = float(sw.sel(rho=0.6, cxl_lat_ns=0.0).mean_ns)
+        >>> idle = float(sw.sel(rho=0.2, cxl_lat_ns=0.0).mean_ns)
+        >>> loaded > idle                # more load, more queueing
+        True
     """
     if spec is None:
         spec = distribution_spec(**axes)
@@ -728,9 +833,15 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
 
 #: Default rho anchors for the DES <-> closed-form cross-check.
 CALIBRATION_RHOS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
-#: Cross-check tolerances: relative mean / p90 deviation per anchor.
+#: Cross-check tolerances: relative mean / p90 / stdev deviation per
+#: anchor.  The stdev gate is deliberately loose: the closed form's sigma
+#: is a §6.2 workload-level fit (sqrt(sigma_base^2 + W_q^2)) while the
+#: DES measures the channel's own heavy-tailed dispersion, which runs up
+#: to ~2x that fit at mid rho -- the gate only catches the surface
+#: drifting out of that known envelope.
 CALIBRATION_MEAN_TOL = 0.15
 CALIBRATION_P90_TOL = 0.20
+CALIBRATION_STDEV_TOL = 1.25
 
 
 def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
@@ -738,7 +849,8 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                          seed: int = 0, warmup: int | None = None,
                          reps: int = 48,
                          mean_tol: float = CALIBRATION_MEAN_TOL,
-                         p90_tol: float = CALIBRATION_P90_TOL) -> dict:
+                         p90_tol: float = CALIBRATION_P90_TOL,
+                         stdev_tol: float = CALIBRATION_STDEV_TOL) -> dict:
     """Cross-validate the DES against the closed-form queueing model.
 
     The two halves of the reproduction -- ``queueing``'s calibrated
@@ -748,10 +860,25 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
     :func:`queueing.closed_form_stats` at every anchor.
 
     Returns ``anchors`` (one row per rho with both values and the
-    relative deltas), ``max_abs_mean_err`` / ``max_abs_p90_err``, the
-    tolerances, an overall ``ok`` flag, and the ``sweep`` itself for
-    further slicing.  Benchmarks surface the per-anchor deltas as
-    ``fig2a.crosscheck.*`` rows so calibration drift shows up in CI.
+    relative deltas), ``max_abs_mean_err`` / ``max_abs_p90_err`` /
+    ``max_abs_stdev_err``, the tolerances, an overall ``ok`` flag, and
+    the ``sweep`` itself for further slicing.  Benchmarks surface the
+    per-anchor deltas as ``fig2a.crosscheck.*`` rows so calibration
+    drift shows up in CI.
+
+    Example (doctest-sized budget; the gates are meant for the 200k
+    default)::
+
+        >>> from repro.core import coaxial
+        >>> val = coaxial.validate_calibration(rhos=(0.3, 0.5),
+        ...                                    steps=20_000, reps=4)
+        >>> [a["rho"] for a in val["anchors"]]
+        [0.3, 0.5]
+        >>> set(val) >= {"anchors", "ok", "max_abs_stdev_err"}
+        True
+        >>> all(k in val["anchors"][0] for k in
+        ...     ("des_mean_ns", "closed_mean_ns", "stdev_err"))
+        True
     """
     rhos = tuple(float(r) for r in rhos)
     base = ChannelConfig(rho=0.5, kappa=float(kappa),
@@ -777,10 +904,12 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
         anchors.append(row)
     max_mean = max(abs(a["mean_err"]) for a in anchors)
     max_p90 = max(abs(a["p90_err"]) for a in anchors)
+    max_stdev = max(abs(a["stdev_err"]) for a in anchors)
     return dict(anchors=anchors, max_abs_mean_err=max_mean,
-                max_abs_p90_err=max_p90, mean_tol=mean_tol,
-                p90_tol=p90_tol,
-                ok=bool(max_mean <= mean_tol and max_p90 <= p90_tol),
+                max_abs_p90_err=max_p90, max_abs_stdev_err=max_stdev,
+                mean_tol=mean_tol, p90_tol=p90_tol, stdev_tol=stdev_tol,
+                ok=bool(max_mean <= mean_tol and max_p90 <= p90_tol
+                        and max_stdev <= stdev_tol),
                 sweep=sw)
 
 

@@ -40,6 +40,19 @@ The whole solve is differentiable end to end (the fixed point unrolls
 through ``lax.fori_loop`` with static bounds): :func:`design_gradient`
 exposes d(geomean speedup)/d(design field) for gradient-based design
 optimization.
+
+Queue-wait backends: the queue model inside the fixed point is pluggable.
+``queue_model="closed_form"`` (the default) uses the calibrated
+``queueing.effective_queue_wait_ns`` / ``stdev_latency_ns`` pair exactly
+as before -- bit-identical to the historical solver.  ``queue_model=
+"memsim"`` replaces both with a DES-derived :class:`repro.core.queuelut.
+QueueLUT`: mean wait and latency stdev are read from the mechanism's
+measured (rho, kappa, outstanding) tables through differentiable
+multilinear interpolation.  The LUT is passed into the jitted solver as
+a pytree operand (``lut=None`` selects the closed form), so the
+pytree-structure difference keys the jit cache -- each backend still
+costs ONE trace per flattened cell count, and ``design_gradient``
+differentiates straight through the table.
 """
 
 from __future__ import annotations
@@ -69,6 +82,29 @@ STREAMING_WS_MB = 1024.0
 #: Fixed-point iterations / damping.
 FP_ITERS = 120
 FP_DAMP = 0.5
+
+#: Pluggable queue-wait backends of the fixed point (see module docstring).
+QUEUE_MODELS = ("closed_form", "memsim")
+
+
+def resolve_queue_lut(queue_model: str, lut=None):
+    """Map a backend name to the LUT operand the jitted solver consumes.
+
+    ``closed_form`` -> ``None`` (the calibrated ``queueing`` closed form);
+    ``memsim`` -> the given :class:`repro.core.queuelut.QueueLUT`, or the
+    cached default surface when none is passed.  The runtime import keeps
+    ``queuelut`` (which builds its tables through ``coaxial``) out of this
+    module's import cycle.
+    """
+    if queue_model not in QUEUE_MODELS:
+        raise ValueError(f"unknown queue_model {queue_model!r}; "
+                         f"choose from {QUEUE_MODELS}")
+    if queue_model == "closed_form":
+        return None
+    if lut is None:
+        from repro.core import queuelut
+        lut = queuelut.default_queue_lut()
+    return lut
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,27 +238,40 @@ def _mpki_eff(wl: WorkloadArrays, sysa: MemSystemArrays, n_active):
 
 
 def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
-                   n_active, iface_lat_ns):
+                   n_active, iface_lat_ns, lut=None):
     """Mean latency components + stdev at the given traffic level.
 
     Branch-free in the design dimension: link terms are computed with
     guarded denominators and zeroed by the ``is_cxl`` mask, so a DDR design
     (links == 0) yields exactly the legacy no-link values.
+
+    ``lut`` selects the queue-wait backend at trace time: ``None`` is the
+    calibrated closed form; a :class:`~repro.core.queuelut.QueueLUT`
+    replaces the DRAM-side wait with the DES-measured mean-wait table
+    (``eta`` stays a multiplicative balance factor on it) and the sigma
+    heuristic with the DES-measured latency-stdev table.  The CXL *link*
+    queue keeps its closed form either way -- the LUT tabulates the DRAM
+    channel, not the serial link.
     """
     eff = _bw_efficiency(wl.wb)
     ch_bw = hw.DDR5_CH_BW_GBPS * eff
     rho = (read_gbps + write_gbps) / (sysa.dram_channels * ch_bw)
     outstanding = n_active * MAX_MLP / sysa.dram_channels
-    w_dram = queueing.effective_queue_wait_ns(
-        rho, kappa=wl.kappa, eta=wl.eta,
-        outstanding_per_channel=outstanding, channel_bw_gbps=ch_bw)
+    if lut is None:
+        w_dram = queueing.effective_queue_wait_ns(
+            rho, kappa=wl.kappa, eta=wl.eta,
+            outstanding_per_channel=outstanding, channel_bw_gbps=ch_bw)
+    else:
+        w_mem, _, sigma_mem = lut.lookup(rho, wl.kappa, outstanding)
+        w_dram = wl.eta * w_mem
     link_rd_bw = jnp.maximum(sysa.links * sysa.link_rd_gbps, 1e-9)
     rho_rx = read_gbps / link_rd_bw
     svc_rx = hw.CACHE_LINE_B / jnp.maximum(sysa.link_rd_gbps, 1e-9)
     w_link = sysa.is_cxl * queueing.link_queue_wait_ns(rho_rx, svc_rx,
                                                        wl.kappa)
     queue = w_dram + w_link
-    sigma = queueing.stdev_latency_ns(queue)
+    sigma = (queueing.stdev_latency_ns(queue) if lut is None
+             else jnp.broadcast_to(sigma_mem, jnp.shape(queue)))
     latency = hw.DRAM_SERVICE_NS + queue + iface_lat_ns
     return latency, queue, sigma, rho
 
@@ -275,12 +324,18 @@ def _rho01(rho):
     return jnp.clip(rho, 0.0, 1.0)
 
 
-def _calibrate(wl: WorkloadArrays, base: MemSystemArrays, n_active):
-    """Traceable core of :func:`calibrate` (baseline as a pytree)."""
+def _calibrate(wl: WorkloadArrays, base: MemSystemArrays, n_active,
+               lut=None):
+    """Traceable core of :func:`calibrate` (baseline as a pytree).
+
+    Calibration runs under the SAME queue backend as the solve: the
+    memsim-backed model re-derives (cpi_exec, mlp_cal) against the DES
+    waits so its baseline meets the Table-4 budget self-consistently.
+    """
     mpki_eff = _mpki_eff(wl, base, n_active)
     read, write = _traffic(wl, wl.ipc, mpki_eff, n_active)
     latency, _, sigma, rho_base = _latency_terms(
-        wl, base, read, write, n_active, base.iface_lat_ns)
+        wl, base, read, write, n_active, base.iface_lat_ns, lut)
     l_eff_cyc = (latency + wl.gamma * sigma) * hw.CORE_CLK_GHZ
     budget = (1.0 - wl.exec_frac) / wl.ipc
     mlp_raw = (mpki_eff / 1000.0) * l_eff_cyc / jnp.maximum(budget, 1e-9)
@@ -292,7 +347,8 @@ def _calibrate(wl: WorkloadArrays, base: MemSystemArrays, n_active):
     return cpi_exec, mlp_cal
 
 
-def calibrate(wl: WorkloadArrays, baseline, n_active=hw.SIM_CORES):
+def calibrate(wl: WorkloadArrays, baseline, n_active=hw.SIM_CORES,
+              queue_model: str = "closed_form", lut=None):
     """Per-workload (cpi_exec, mlp_cal) reproducing Table 4 on the baseline.
 
     Given exec_frac, the memory-CPI budget at the table operating point is
@@ -301,23 +357,26 @@ def calibrate(wl: WorkloadArrays, baseline, n_active=hw.SIM_CORES):
     architectural [1, MAX_MLP]; mlp_cal back-solves the load-adaptive form.
 
     ``baseline`` may be a :class:`MemSystem` façade or a
-    :class:`MemSystemArrays` pytree.
+    :class:`MemSystemArrays` pytree.  ``queue_model`` picks the wait
+    backend the calibration is run against (see module docstring).
     """
     if isinstance(baseline, MemSystem):
         baseline = baseline.as_arrays()
-    return _calibrate(wl, baseline, n_active)
+    return _calibrate(wl, baseline, n_active,
+                      resolve_queue_lut(queue_model, lut))
 
 
 def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
-                 n_active, iface_override_ns):
+                 n_active, iface_override_ns, lut=None):
     """Calibrate + solve ONE design point (all workloads vectorized).
 
     ``iface_override_ns`` replaces the CXL latency premium of CXL designs;
     ``nan`` means "use the design's own premium".  Non-CXL designs keep
     their (zero) premium, so a baseline sliced out of any latency grid is
-    identical to the baseline solved alone.
+    identical to the baseline solved alone.  ``lut`` (None = closed form)
+    picks the queue-wait backend for calibration AND the fixed point.
     """
-    cpi_exec, mlp = _calibrate(wl, base, n_active)
+    cpi_exec, mlp = _calibrate(wl, base, n_active, lut)
     premium = jnp.where(
         sysa.is_cxl > 0.0,
         jnp.where(jnp.isnan(iface_override_ns), sysa.iface_lat_ns,
@@ -329,7 +388,7 @@ def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
     def body(_, ipc):
         read, write = _traffic(wl, ipc, mpki_eff, n_active)
         latency, _, sigma, rho = _latency_terms(
-            wl, sysa, read, write, n_active, premium)
+            wl, sysa, read, write, n_active, premium, lut)
         mlp_eff = _mlp_eff(wl, mlp, rho)
         cpi = jnp.maximum(
             cpi_exec + _cpi_mem(wl, mpki_eff, latency, sigma, mlp_eff),
@@ -339,7 +398,7 @@ def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
     ipc = jax.lax.fori_loop(0, FP_ITERS, body, wl.ipc)
     read, write = _traffic(wl, ipc, mpki_eff, n_active)
     latency, queue, sigma, rho = _latency_terms(
-        wl, sysa, read, write, n_active, premium)
+        wl, sysa, read, write, n_active, premium, lut)
     iface = jnp.broadcast_to(premium, jnp.shape(ipc))
     return ipc, latency, queue, sigma, rho, read, write, iface
 
@@ -354,19 +413,22 @@ def solve_trace_count() -> int:
     return _TRACE_COUNT[0]
 
 
-def _solve_cells(wl, sysa, base, n_active, iface_ov, sys_ov, wl_ov):
+def _solve_cells(wl, sysa, base, n_active, iface_ov, sys_ov, wl_ov,
+                 lut=None):
     """vmap ``_solve_point`` over ONE flattened axis of grid cells.
 
     Every per-cell input -- the design leaves, the core count, the CXL
     latency override and both overrides pytrees -- is ``(N,)``; overrides
     are applied branch-free inside the cell before the fixed point runs.
-    Output leaves are ``(N, n_workloads)``.
+    ``lut`` is shared across cells (closed over, not vmapped).  Output
+    leaves are ``(N, n_workloads)``.
     """
     _TRACE_COUNT[0] += 1  # side effect runs at trace time only
 
     def cell(s, n, io, so, wo):
         return _solve_point(_apply_workload_overrides(wl, wo),
-                            _apply_design_overrides(s, so), base, n, io)
+                            _apply_design_overrides(s, so), base, n, io,
+                            lut)
 
     return jax.vmap(cell)(sysa, n_active, iface_ov, sys_ov, wl_ov)
 
@@ -401,17 +463,22 @@ def _nan_cells(n: int, fields) -> dict:
 def solve_cells(sysa: MemSystemArrays, *, n_active, iface_override_ns=None,
                 design_overrides=None, workload_overrides=None,
                 baseline: MemSystem | None = None,
-                workloads=WORKLOADS) -> ModelResult:
+                workloads=WORKLOADS, queue_model: str = "closed_form",
+                lut=None) -> ModelResult:
     """Solve N flattened grid cells in one jitted call.
 
     ``sysa`` leaves and ``n_active`` are ``(N,)``; ``iface_override_ns``
     and every overrides entry are ``(N,)`` with NaN meaning "keep the
     design's / workload's own value".  Missing override fields are filled
     with NaN so the jit cache keys on N alone -- any axis combination of
-    the same flattened size shares one compile.
+    the same flattened size shares one compile.  ``queue_model`` picks the
+    wait backend (``"memsim"`` resolves ``lut`` to the cached default
+    surface when none is given); per backend the grid still costs one
+    trace per N.
     """
     wl = _to_jnp(as_arrays(workloads))
     base = (baseline or DDR_BASELINE).as_arrays()
+    lut = resolve_queue_lut(queue_model, lut)
     n = int(np.shape(sysa.dram_channels)[0])
     j = lambda x: jnp.asarray(np.asarray(x, np.float64))
     sysa = MemSystemArrays(*(j(leaf) for leaf in sysa))
@@ -421,18 +488,22 @@ def solve_cells(sysa: MemSystemArrays, *, n_active, iface_override_ns=None,
     sys_ov.update({f: j(v) for f, v in (design_overrides or {}).items()})
     wl_ov = _nan_cells(n, SWEEPABLE_WORKLOAD_FIELDS)
     wl_ov.update({f: j(v) for f, v in (workload_overrides or {}).items()})
-    out = _solve_cells_jit(wl, sysa, base, j(n_active), iface, sys_ov, wl_ov)
+    out = _solve_cells_jit(wl, sysa, base, j(n_active), iface, sys_ov,
+                           wl_ov, lut)
     return _pack_result(out, squeeze=False)
 
 
 def solve(sys: MemSystem, *, baseline: MemSystem | None = None,
           n_active: int = hw.SIM_CORES, iface_lat_ns: float | None = None,
-          workloads=WORKLOADS) -> ModelResult:
+          workloads=WORKLOADS, queue_model: str = "closed_form",
+          lut=None) -> ModelResult:
     """Evaluate all workloads on ``sys`` (calibrated against ``baseline``).
 
     Thin wrapper over the cell solver with N=1: every single-design call,
     for ANY design / core count / latency premium, shares one XLA
-    compilation.
+    compilation (per queue backend).  ``queue_model="memsim"`` evaluates
+    the fixed point through the DES-derived :class:`~repro.core.queuelut.
+    QueueLUT` instead of the closed form.
     """
     sysa = stack_designs([sys])
     if iface_lat_ns is not None:
@@ -443,13 +514,15 @@ def solve(sys: MemSystem, *, baseline: MemSystem | None = None,
                                        float(iface_lat_ns)))
     res = solve_cells(sysa, n_active=_grid([n_active]),
                       iface_override_ns=_grid([iface_lat_ns]),
-                      baseline=baseline, workloads=workloads)
+                      baseline=baseline, workloads=workloads,
+                      queue_model=queue_model, lut=lut)
     return res[0]
 
 
 def solve_batch(designs, *, n_active_grid=(hw.SIM_CORES,),
                 iface_lat_grid=(None,), baseline: MemSystem | None = None,
-                workloads=WORKLOADS) -> ModelResult:
+                workloads=WORKLOADS, queue_model: str = "closed_form",
+                lut=None) -> ModelResult:
     """Evaluate a designs x iface-latencies x core-counts grid in ONE jit.
 
     ``iface_lat_grid`` entries override the CXL latency premium; ``None``
@@ -468,7 +541,8 @@ def solve_batch(designs, *, n_active_grid=(hw.SIM_CORES,),
     iface = jnp.tile(jnp.repeat(_grid(iface_lat_grid), c), d)
     n_active = jnp.tile(_grid(n_active_grid), d * l)
     res = solve_cells(sysa, n_active=n_active, iface_override_ns=iface,
-                      baseline=baseline, workloads=workloads)
+                      baseline=baseline, workloads=workloads,
+                      queue_model=queue_model, lut=lut)
     return res.reshape(d, l, c)
 
 
@@ -584,12 +658,12 @@ def geomean(x, names=None) -> float:
 GRADIENT_FIELDS = SWEEPABLE_DESIGN_FIELDS + ("iface_lat_ns",)
 
 
-def _gm_speedup(vals, sysa0, wl, basea, n_active, base_ipc):
+def _gm_speedup(vals, sysa0, wl, basea, n_active, base_ipc, lut):
     """Geomean speedup of ``sysa0`` with ``vals`` substituted, vs a fixed
     baseline IPC vector -- the scalar :func:`design_gradient` derives."""
     sysa = sysa0._replace(**{k: jnp.asarray(v) for k, v in vals.items()})
     nan = jnp.asarray(float("nan"))
-    ipc = _solve_point(wl, sysa, basea, n_active, nan)[0]
+    ipc = _solve_point(wl, sysa, basea, n_active, nan, lut)[0]
     return jnp.exp(jnp.mean(jnp.log(ipc / base_ipc)))
 
 
@@ -602,15 +676,33 @@ def design_gradient(sys: MemSystem | None = None,
                     fields=GRADIENT_FIELDS, *,
                     n_active: int = hw.SIM_CORES,
                     baseline: MemSystem | None = None,
-                    workloads=WORKLOADS) -> dict[str, float]:
+                    workloads=WORKLOADS,
+                    queue_model: str = "closed_form",
+                    lut=None) -> dict[str, float]:
     """d(geomean speedup vs baseline) / d(design field) at ``sys``.
 
     Differentiates straight through the damped fixed point (the
     ``fori_loop`` has static bounds, so JAX unrolls its reverse pass via
     scan).  The ``is_cxl`` topology mask is held at the design's own value
     -- gradients flow through capacities (channels, links, bandwidths,
-    LLC), not through the discrete DDR/CXL switch.  Returns
+    LLC), not through the discrete DDR/CXL switch.  Under
+    ``queue_model="memsim"`` the reverse pass also flows through the
+    :class:`~repro.core.queuelut.QueueLUT`'s multilinear interpolation
+    (piecewise-constant slope between grid nodes), with the baseline
+    reference solved under the same backend.  Returns
     ``{field: gradient}`` in the order requested.
+
+    Example::
+
+        >>> from repro.core.cpu_model import COAXIAL_4X, design_gradient
+        >>> g = design_gradient(COAXIAL_4X,
+        ...                     ("dram_channels", "iface_lat_ns"))
+        >>> sorted(g)
+        ['dram_channels', 'iface_lat_ns']
+        >>> g["dram_channels"] > 0.0    # more channels always help
+        True
+        >>> g["iface_lat_ns"] < 0.0     # a slower link never does
+        True
     """
     sys = sys if sys is not None else COAXIAL_4X
     unknown = [f for f in fields if f not in GRADIENT_FIELDS]
@@ -618,14 +710,15 @@ def design_gradient(sys: MemSystem | None = None,
         raise ValueError(f"non-differentiable or unknown design fields "
                          f"{unknown}; choose from {GRADIENT_FIELDS}")
     baseline = baseline or DDR_BASELINE
+    lut = resolve_queue_lut(queue_model, lut)
     wl = _to_jnp(as_arrays(workloads))
     # The reference is constant under the differentiated fields; reuse the
     # shared cell solver's compile for it.
     base_ipc = jnp.asarray(
         solve(baseline, baseline=baseline, n_active=n_active,
-              workloads=workloads).ipc)
+              workloads=workloads, queue_model=queue_model, lut=lut).ipc)
     vals = {f: jnp.asarray(float(getattr(sys, f))) for f in fields}
     grads = _design_grad_jit(vals, sys.as_arrays(), wl,
                              baseline.as_arrays(),
-                             jnp.asarray(float(n_active)), base_ipc)
+                             jnp.asarray(float(n_active)), base_ipc, lut)
     return {f: float(grads[f]) for f in fields}

@@ -11,6 +11,16 @@ back Fig 2a's load-latency curve and Fig 6b's CDF comparison.
 Model per channel:
   * arrivals: two-state MMPP (burst/idle) Bernoulli process per ns; the
     burst-state rate is ``kappa`` times the average, idle fills the rest;
+  * closed loop: a finite in-flight population ``outstanding`` (MSHR/ROB
+    bound per channel) gates ADMISSION -- while the backlog exceeds
+    ``outstanding * t_xfer_ns`` of queued work the cores' miss buffers
+    are full, so no new request enters the queue (the core stalls
+    instead).  Admitted requests keep their true heavy-tailed waits; what
+    the bound removes is exactly the paper's §3.1 closed-loop effect, the
+    open-loop hyperbola detaching from what a finite machine can observe.
+    The default is unbounded (``inf``), which reproduces the open-loop
+    simulator bit for bit; ``core/queuelut.py`` sweeps this axis to build
+    the closed-loop wait surface ``cpu_model`` consumes;
   * service: the channel serializes one 64B line per ``t_xfer`` ns *on
     average* (38.4 GB/s -> 1.67 ns), but the effective per-request service
     is heavy-tailed: with small probability the controller blocks for a
@@ -104,6 +114,10 @@ class ChannelConfig:
 
     rho: float                  # target bus utilization, 0..~0.95
     kappa: float = 1.0          # burst peak-to-mean arrival ratio
+    #: In-flight request population per channel (MSHR/ROB bound); arrivals
+    #: are blocked while the backlog holds more than
+    #: ``outstanding * t_xfer_ns`` of queued work.  ``inf`` = open loop.
+    outstanding: float = float("inf")
     t_xfer_ns: float = hw.CACHE_LINE_B / hw.DDR5_CH_BW_GBPS
     service_ns: float = hw.DRAM_SERVICE_NS - 2.0   # pipelined access part
     cxl_lat_ns: float = 0.0     # CXL interface premium (0 => direct DDR)
@@ -129,6 +143,7 @@ class ChannelArrays(NamedTuple):
 
     rho: jnp.ndarray
     kappa: jnp.ndarray
+    outstanding: jnp.ndarray
     t_xfer_ns: jnp.ndarray
     service_ns: jnp.ndarray
     cxl_lat_ns: jnp.ndarray
@@ -234,6 +249,12 @@ def _sim_core(cha: ChannelArrays, ov, keys, record):
             jnp.where(switch_u < p_enter, 1.0, 0.0))
         rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
         arrive = (arrive_u < rate).astype(jnp.float32)
+        # Closed-loop population bound: while the backlog holds more than
+        # ``outstanding`` requests' worth of work the MSHRs are full and
+        # the core stalls instead of issuing -- the arrival is blocked,
+        # not queued.  inf (the default) admits everything: open loop.
+        arrive = arrive * (backlog <= c.outstanding * c.t_xfer_ns
+                           ).astype(jnp.float32)
         jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns
         latency = backlog + c.service_ns + 2.0 + jitter + c.cxl_lat_ns
         bin_idx = jnp.clip((latency / BIN_NS).astype(jnp.int32), 0, N_BINS - 1)

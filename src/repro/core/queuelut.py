@@ -1,0 +1,195 @@
+"""DES-derived queue-wait lookup surface: the mechanism as a solver backend.
+
+``cpu_model``'s fixed point needs, per workload and per iteration, the
+DRAM-side queue wait at an operating point (utilization ``rho``, burstiness
+``kappa``, closed-loop population ``outstanding``).  The closed form
+(``queueing.effective_queue_wait_ns``) answers that analytically; this
+module answers it *mechanistically*: one batched
+``coaxial.distribution_sweep`` runs the DES (``memsim``) over a
+(rho, kappa, outstanding) grid -- ``outstanding`` is a real simulated
+field, the finite in-flight population that caps the FIFO backlog -- and
+the resulting latency distributions are reduced to three tables
+(mean wait / p90 wait / latency stdev).
+
+:class:`QueueLUT` is a pytree of those tables plus their grids, with
+**differentiable multilinear interpolation**: the lookup is piecewise
+(tri)linear in the query point, clamped to the grid hull, and pure
+``jnp`` -- so ``cpu_model`` can pass a LUT straight into its jitted cell
+solver (any named-axis grid still lowers to ONE trace per flattened cell
+count) and ``design_gradient`` can differentiate through the fixed point
+*and* the table.  Passing ``lut=None`` to the solver selects the closed
+form; the pytree-structure difference is what keys the jit cache, no
+static flags needed.
+
+Build cost: the default surface (12 x 5 x 5 grid) is one jitted
+``lax.scan``; :func:`default_queue_lut` caches it per
+(steps, seed, reps), so a whole session pays for it once.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hw
+
+#: Default utilization grid: denser near saturation, where the open-loop
+#: hyperbola is steep and linear interpolation would otherwise smear the
+#: knee of the load-latency curve.
+DEFAULT_RHO_GRID = (0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.65, 0.72,
+                    0.78, 0.84, 0.89, 0.93)
+#: Default burstiness grid (covers the Table-4 suite values 1.3..1.6 and
+#: the synthetic-sweep range up to 3.2).
+DEFAULT_KAPPA_GRID = (1.0, 1.3, 1.6, 2.2, 3.2)
+#: Default closed-loop population grid: ``n_active * MAX_MLP /
+#: dram_channels`` spans ~2 (8 channels, 1 core) to 192 (the 12-core,
+#: 1-channel DDR baseline).
+DEFAULT_OUTSTANDING_GRID = (2.0, 8.0, 24.0, 64.0, 192.0)
+#: Default DES budget per cell (ns simulated) and replicas per cell.
+DEFAULT_STEPS = 120_000
+DEFAULT_REPS = 2
+
+
+class QueueLUT(NamedTuple):
+    """DES-measured queue-wait surface over (rho, kappa, outstanding).
+
+    A pytree of six array leaves: three ascending coordinate grids and
+    three ``(R, K, O)`` tables -- mean queue wait, p90 queue wait, and
+    latency standard deviation (all ns).  :meth:`lookup` interpolates all
+    three multilinearly (clamped at the hull), vectorizes over any
+    broadcastable query shapes, works inside ``jit``, and is
+    differentiable in the query point.
+
+    Example (a hand-built two-point surface; real tables come from
+    :func:`build_queue_lut`)::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.queuelut import QueueLUT
+        >>> z = jnp.zeros((2, 2, 2))
+        >>> lut = QueueLUT(rho_grid=jnp.array([0.0, 1.0]),
+        ...                kappa_grid=jnp.array([1.0, 2.0]),
+        ...                outstanding_grid=jnp.array([1.0, 100.0]),
+        ...                wait_ns=z.at[1].set(80.0),
+        ...                p90_wait_ns=z, sigma_ns=z)
+        >>> float(lut.wait(0.5, 1.0, 1.0))    # halfway up the rho edge
+        40.0
+        >>> float(lut.wait(2.0, 1.0, 1.0))    # clamped at the grid hull
+        80.0
+    """
+
+    rho_grid: jnp.ndarray          # (R,) ascending
+    kappa_grid: jnp.ndarray        # (K,) ascending
+    outstanding_grid: jnp.ndarray  # (O,) ascending
+    wait_ns: jnp.ndarray           # (R, K, O) mean queue wait
+    p90_wait_ns: jnp.ndarray       # (R, K, O) p90 queue wait
+    sigma_ns: jnp.ndarray          # (R, K, O) latency stdev
+
+    def lookup(self, rho, kappa, outstanding):
+        """Interpolated ``(mean wait, p90 wait, sigma)`` at a query point.
+
+        Queries broadcast together; out-of-grid coordinates clamp to the
+        nearest hull face (constant extrapolation -- the DES was not run
+        there, so the table refuses to invent a steeper law).
+        """
+        pts = jnp.broadcast_arrays(*(jnp.asarray(x, self.wait_ns.dtype)
+                                     for x in (rho, kappa, outstanding)))
+        grids = (self.rho_grid, self.kappa_grid, self.outstanding_grid)
+        loc = [_locate(g, p) for g, p in zip(grids, pts)]
+        return tuple(_blend(t, loc) for t in
+                     (self.wait_ns, self.p90_wait_ns, self.sigma_ns))
+
+    def wait(self, rho, kappa, outstanding):
+        """Interpolated mean queue wait alone (ns)."""
+        return self.lookup(rho, kappa, outstanding)[0]
+
+
+def _locate(grid, x):
+    """(lower index, fraction) of ``x`` on an ascending grid, clamped.
+
+    The fraction is what gradients flow through (piecewise linear); the
+    index is integer and carries none, which is exactly the derivative a
+    multilinear surface has.
+    """
+    x = jnp.clip(x, grid[0], grid[-1])
+    i = jnp.clip(jnp.searchsorted(grid, x, side="right") - 1,
+                 0, grid.shape[0] - 2)
+    t = (x - grid[i]) / (grid[i + 1] - grid[i])
+    return i, jnp.clip(t, 0.0, 1.0)
+
+
+def _blend(table, loc):
+    """Trilinear blend of the 8 corner cells around a located point."""
+    out = 0.0
+    for corner in range(8):
+        w = 1.0
+        idx = []
+        for d, (i, t) in enumerate(loc):
+            hi = (corner >> d) & 1
+            w = w * (t if hi else 1.0 - t)
+            idx.append(i + hi)
+        out = out + w * table[tuple(idx)]
+    return out
+
+
+def _check_grid(name, grid):
+    g = np.asarray(grid, np.float64)
+    if g.ndim != 1 or g.size < 2:
+        raise ValueError(f"{name} grid needs >= 2 points, got {g.shape}")
+    if not np.all(np.diff(g) > 0):
+        raise ValueError(f"{name} grid must be strictly ascending: "
+                         f"{g.tolist()}")
+    return tuple(float(v) for v in g)
+
+
+def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
+                    outstanding=DEFAULT_OUTSTANDING_GRID,
+                    steps: int = DEFAULT_STEPS, seed: int = 0,
+                    reps: int = DEFAULT_REPS, base=None) -> QueueLUT:
+    """Run ONE batched distribution sweep and reduce it to a QueueLUT.
+
+    The whole (rho x kappa x outstanding) grid lowers to one jitted
+    ``lax.scan`` (``coaxial.distribution_sweep``); the wait tables are
+    the DES latency means/p90s minus the unloaded DRAM service time, and
+    the sigma table is the DES latency stdev verbatim -- the measured
+    replacement for ``queueing.stdev_latency_ns``'s heuristic.
+
+    Example (tiny grid, doctest-sized budget)::
+
+        >>> from repro.core.queuelut import build_queue_lut
+        >>> lut = build_queue_lut(rho=(0.2, 0.6), kappa=(1.0, 2.0),
+        ...                       outstanding=(8.0, 192.0), steps=4000,
+        ...                       reps=1)
+        >>> lut.wait_ns.shape
+        (2, 2, 2)
+        >>> bool(lut.wait(0.6, 1.0, 192.0) > lut.wait(0.2, 1.0, 192.0))
+        True
+    """
+    from repro.core import coaxial  # runtime: coaxial imports cpu_model
+    rho = _check_grid("rho", rho)
+    kappa = _check_grid("kappa", kappa)
+    outstanding = _check_grid("outstanding", outstanding)
+    sw = coaxial.distribution_sweep(
+        rho=rho, kappa=kappa, outstanding=outstanding,
+        base=base, steps=int(steps), seed=int(seed), reps=int(reps))
+    stats = sw.stats
+    to_j = lambda x: jnp.asarray(np.asarray(x, np.float64))
+    return QueueLUT(
+        rho_grid=to_j(rho), kappa_grid=to_j(kappa),
+        outstanding_grid=to_j(outstanding),
+        wait_ns=to_j(np.maximum(stats.mean_ns - hw.DRAM_SERVICE_NS, 0.0)),
+        p90_wait_ns=to_j(np.maximum(stats.p90_ns - hw.DRAM_SERVICE_NS, 0.0)),
+        sigma_ns=to_j(stats.stdev_ns))
+
+
+@functools.lru_cache(maxsize=None)
+def default_queue_lut(steps: int = DEFAULT_STEPS, seed: int = 0,
+                      reps: int = DEFAULT_REPS) -> QueueLUT:
+    """The shared default-grid surface; built once per (steps, seed, reps).
+
+    This is what ``cpu_model.solve(..., queue_model="memsim")`` uses when
+    no explicit LUT is passed.
+    """
+    return build_queue_lut(steps=steps, seed=seed, reps=reps)

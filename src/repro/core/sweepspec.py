@@ -50,7 +50,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import cpu_model, memsim, workloads
-from repro.core.cpu_model import MemSystem, MemSystemArrays
+from repro.core.cpu_model import QUEUE_MODELS, MemSystem, MemSystemArrays
 from repro.core.memsim import ChannelArrays, ChannelConfig
 
 #: Design fields an axis may override (``iface_lat_ns`` has its own
@@ -69,10 +69,11 @@ KIND_N_ACTIVE = "n_active"
 KIND_DESIGN_FIELD = "design_field"
 KIND_WORKLOAD_FIELD = "workload_field"
 KIND_CHANNEL_FIELD = "channel_field"
+KIND_QUEUE_MODEL = "queue_model"
 
 #: Every bindable axis name (the valid ``sweep_spec`` keywords).
-AXIS_NAMES = (("design", "iface_lat_ns", "n_active") + DESIGN_FIELDS +
-              WORKLOAD_FIELDS)
+AXIS_NAMES = (("design", "iface_lat_ns", "n_active", "queue_model") +
+              DESIGN_FIELDS + WORKLOAD_FIELDS)
 
 
 def _kind_of(name: str) -> str:
@@ -82,13 +83,15 @@ def _kind_of(name: str) -> str:
         return KIND_IFACE
     if name == "n_active":
         return KIND_N_ACTIVE
+    if name == "queue_model":
+        return KIND_QUEUE_MODEL
     if name in DESIGN_FIELDS:
         return KIND_DESIGN_FIELD
     if name in WORKLOAD_FIELDS:
         return KIND_WORKLOAD_FIELD
     raise ValueError(
         f"unknown sweep axis {name!r}; bindable axes: design, iface_lat_ns, "
-        f"n_active, design fields {DESIGN_FIELDS}, "
+        f"n_active, queue_model, design fields {DESIGN_FIELDS}, "
         f"workload fields {WORKLOAD_FIELDS}")
 
 
@@ -123,6 +126,10 @@ class Axis:
             name = value.name if isinstance(value, MemSystem) else value
             for i, d in enumerate(self.values):
                 if d.name == name:
+                    return i
+        elif self.kind == KIND_QUEUE_MODEL:
+            for i, v in enumerate(self.values):
+                if v == value:
                     return i
         else:
             try:
@@ -187,6 +194,15 @@ def _as_axis(name: str, values) -> Axis:
             if not isinstance(d, MemSystem):
                 raise TypeError(
                     f"design axis entries must be MemSystem, got {d!r}")
+    elif kind == KIND_QUEUE_MODEL:
+        if isinstance(values, str):
+            values = (values,)
+        values = tuple(values)
+        for v in values:
+            if v not in QUEUE_MODELS:
+                raise ValueError(
+                    f"axis 'queue_model': {v!r} is not a backend; choose "
+                    f"from {QUEUE_MODELS}")
     else:
         if np.ndim(values) == 0 and not isinstance(values, (list, tuple)):
             values = (values,)
@@ -212,7 +228,27 @@ def sweep_spec(design=None, **axes) -> SweepSpec:
     ``design`` defaults to every registered design (``coaxial.
     all_designs()``) and always comes first; the remaining keyword
     arguments each declare one axis binding the named field.  Scalars are
-    promoted to length-1 axes.
+    promoted to length-1 axes.  ``queue_model`` is an axis too -- the
+    solver backend (``"closed_form"`` / ``"memsim"``) sweeps like any
+    other coordinate (``coaxial.solve_spec`` runs one jitted pass per
+    backend and stacks them).
+
+    Example::
+
+        >>> from repro.core.sweepspec import sweep_spec
+        >>> from repro.core.cpu_model import COAXIAL_4X, DDR_BASELINE
+        >>> spec = sweep_spec(design=(DDR_BASELINE, COAXIAL_4X),
+        ...                   iface_lat_ns=[None, 50.0],
+        ...                   kappa=[1.0, 1.6],
+        ...                   queue_model=("closed_form", "memsim"))
+        >>> spec.names
+        ('design', 'iface_lat_ns', 'kappa', 'queue_model')
+        >>> spec.shape
+        (2, 2, 2, 2)
+        >>> spec.axis("kappa").values
+        (1.0, 1.6)
+        >>> spec.axis("queue_model").index("memsim")
+        1
     """
     if design is None:
         from repro.core import coaxial  # runtime import (registry lives there)
@@ -277,6 +313,13 @@ def build_flat(spec: SweepSpec, *, pin_design: MemSystem | None = None,
             iface = _flat(vals, pos, shape)
         elif ax.kind == KIND_N_ACTIVE:
             n_active = _flat(ax.values, pos, shape)
+        elif ax.kind == KIND_QUEUE_MODEL:
+            # The backend is a trace-level choice, not a per-cell array:
+            # coaxial.solve_spec splits the grid and solves one jitted
+            # pass per backend before lowering reaches this point.
+            raise ValueError(
+                "queue_model axes cannot lower to flat cell arrays; "
+                "solve them through coaxial.solve_spec")
         elif ax.kind == KIND_DESIGN_FIELD:
             if pin_design is None:
                 sys_ov = dict(sys_ov)

@@ -57,8 +57,10 @@ class TestCrossValidation:
         assert val["ok"]
         assert val["max_abs_mean_err"] <= val["mean_tol"]
         assert val["max_abs_p90_err"] <= val["p90_tol"]
-        # stdev deltas are reported (not gated): the closed-form sigma is
-        # a §6.2 workload-level calibration, not an open-loop queue law.
+        # stdev is gated loosely (the closed-form sigma is a §6.2
+        # workload-level calibration, so the DES runs up to ~2x above it;
+        # the bound only catches drift out of that known envelope).
+        assert val["max_abs_stdev_err"] <= val["stdev_tol"]
         assert all(np.isfinite(a["stdev_err"]) for a in val["anchors"])
 
     def test_anchor_values_match_closed_form_helpers(self, val):

@@ -1,0 +1,37 @@
+"""Docs contract: the docs tree exists, README links it, links resolve.
+
+Runs the same stdlib link checker the CI docs job runs, so broken
+relative links fail tier-1 locally before they fail CI.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "FIGURES.md").is_file()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/FIGURES.md" in readme
+
+
+def test_relative_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_links.py"),
+         str(ROOT / "README.md"), str(ROOT / "docs")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_checker_catches_broken_links(tmp_path):
+    (tmp_path / "bad.md").write_text("see [missing](no/such/file.md)")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_links.py"),
+         str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "no/such/file.md" in proc.stdout

@@ -1,0 +1,38 @@
+"""Doctest collection pass over the core public API.
+
+Every public entry point named here must carry a RUNNABLE example in its
+docstring (a real ``>>>`` doctest, executed by this module -- not prose
+pretending to be an example).  Examples are written with doctest-sized
+DES/solve budgets so the whole pass stays cheap.
+"""
+
+import doctest
+
+import pytest
+
+from repro.core import coaxial, cpu_model, queuelut, sweepspec
+
+PUBLIC_API = [
+    ("coaxial.distribution_sweep", coaxial.distribution_sweep),
+    ("coaxial.validate_calibration", coaxial.validate_calibration),
+    ("sweepspec.sweep_spec", sweepspec.sweep_spec),
+    ("SweepResult.sel", coaxial.SweepResult.sel),
+    ("SweepResult.pareto", coaxial.SweepResult.pareto),
+    ("cpu_model.design_gradient", cpu_model.design_gradient),
+    ("queuelut.QueueLUT", queuelut.QueueLUT),
+    ("queuelut.build_queue_lut", queuelut.build_queue_lut),
+]
+
+
+@pytest.mark.parametrize("name,obj", PUBLIC_API,
+                         ids=[n for n, _ in PUBLIC_API])
+def test_public_api_example_runs(name, obj):
+    finder = doctest.DocTestFinder(recurse=False)
+    tests = [t for t in finder.find(obj, name) if t.examples]
+    assert tests, f"{name} has no runnable docstring example"
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    for t in tests:
+        result = runner.run(t)
+        assert result.failed == 0, (
+            f"{name}: {result.failed}/{result.attempted} doctest "
+            f"example(s) failed (see captured stdout)")

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in markdown files (stdlib only).
+
+    python tools/check_links.py [PATH ...]
+
+Each PATH is a markdown file or a directory to scan recursively for
+``*.md`` (default: ``README.md`` and ``docs/``).  Inline links
+``[text](target)`` are checked; targets that are external
+(``http(s)://``, ``mailto:``) or pure in-page anchors (``#...``) are
+skipped, fenced code blocks are stripped first, and ``target#anchor``
+checks only the file part.  Exit code 1 if any relative target does not
+exist on disk -- the CI docs job runs exactly this.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def broken_links(path: Path) -> list[str]:
+    text = FENCE_RE.sub("", path.read_text())
+    bad = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            bad.append(target)
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] or [Path("README.md"), Path("docs")]
+    files: list[Path] = []
+    for root in roots:
+        if root.is_dir():
+            files.extend(sorted(root.rglob("*.md")))
+        elif root.exists():
+            files.append(root)
+        else:
+            print(f"{root}: no such file or directory")
+            return 1
+    failed = False
+    for f in files:
+        for target in broken_links(f):
+            print(f"{f}: broken relative link -> {target}")
+            failed = True
+    if failed:
+        return 1
+    print(f"checked {len(files)} markdown file(s): all relative links "
+          f"resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
