@@ -14,19 +14,23 @@ The drift is the finding, not a bug: the closed form caps queue waits at
 the *mean* level (occupancy-scaled architectural cap) while the DES
 bounds every sample path through its finite in-flight population, so the
 two part ways exactly at the high-rho operating points that decide the
-CoaXiaL headline.  ``REPRO_DES_STEPS`` caps the LUT build for CI smoke.
+CoaXiaL headline.  ``REPRO_DES_STEPS`` caps the LUT build for CI smoke;
+the build runs on the DES's default engine (the per-request event
+engine) unless ``REPRO_DES_ENGINE`` overrides it.
 """
 
 import numpy as np
 
-from benchmarks.common import des_steps, emit, time_call
+from benchmarks.common import des_budget, des_engine, emit, time_call
 from repro.core import coaxial, cpu_model, hw, queuelut
 from repro.core.workloads import NAMES
 
 
 def drift_sweep() -> "coaxial.SweepResult":
     """Designs x (default, pessimistic) latency x both queue backends."""
-    lut = queuelut.default_queue_lut(steps=des_steps(queuelut.DEFAULT_STEPS))
+    lut = queuelut.default_queue_lut(
+        steps=des_budget(queuelut.DEFAULT_STEPS),
+        engine=des_engine(queuelut.DEFAULT_ENGINE))
     spec = coaxial.sweep_spec(
         design=coaxial.all_designs(),
         iface_lat_ns=(None, hw.CXL_LAT_PESSIMISTIC_NS),

@@ -6,22 +6,26 @@ Both curves come out of ONE batched distribution sweep
 (``coaxial.validate_calibration``), which also cross-checks the DES
 against the closed form; the per-anchor deltas are emitted as
 ``fig2a.crosscheck.*`` rows so calibration drift surfaces in the CI
-report.
+report.  ``REPRO_DES_ENGINE=event`` (the CI smoke setting) runs the
+sweep on the per-request event engine, which raises the effective
+sample count at unchanged CI time; the engine used is emitted as a row.
 """
 
-from benchmarks.common import des_steps, emit, time_call
+from benchmarks.common import des_engine, des_steps, emit, time_call
 from repro.core import coaxial, queueing
 
 
 def main():
     rhos = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
     steps = des_steps(200_000)
+    engine = des_engine()
     us, val = time_call(
         lambda: coaxial.validate_calibration(
-            rhos=rhos, steps=steps,
+            rhos=rhos, steps=steps, engine=engine,
             reps=max(2, min(64, 9_600_000 // steps))),
         iters=1)
     per = us / len(rhos)
+    emit("fig2a.engine", 0.0, engine)
     for a in val["anchors"]:
         r = a["rho"]
         emit(f"fig2a.rho{r:.1f}.param_mean_ns", per,

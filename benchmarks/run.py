@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.sweep_grid",
     "benchmarks.pareto_frontier",
     "benchmarks.drift_headline",
+    "benchmarks.memsim_speed",
     "benchmarks.stream_kernels",
     "benchmarks.channelized_decode",
     "benchmarks.roofline",

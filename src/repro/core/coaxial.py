@@ -65,7 +65,8 @@ __all__ = [
     "all_designs", "area_report", "pin_report", "design_cost", "edp_report",
     "sensitivity_latency", "sensitivity_cores", "ChannelConfig",
     "LatencyStats", "DistributionSweepResult", "distribution_spec",
-    "distribution_sweep", "validate_calibration", "QUEUE_MODELS",
+    "distribution_sweep", "validate_calibration", "crosscheck_engines",
+    "QUEUE_MODELS",
     "QueueLUT", "build_queue_lut", "default_queue_lut",
 ]
 
@@ -729,6 +730,9 @@ class DistributionSweepResult(_NamedAxes):
     warmup: int
     seed: int
     reps: int = 1
+    #: Which memsim engine produced the distributions ("timestep" or
+    #: "event"); the grid cost one trace of that engine's kernel.
+    engine: str = "timestep"
 
     def sel(self, **coords):
         """Select coordinates by axis name; each selected axis is dropped.
@@ -787,17 +791,23 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
                        base: ChannelConfig | None = None,
                        steps: int = 200_000, seed: int = 0,
                        warmup: int | None = None, reps: int = 1,
+                       engine: str = "timestep",
                        **axes) -> DistributionSweepResult:
     """Run the DES over a named-axis grid of channel parameters.
 
     Pass a memsim-targeted :class:`SweepSpec` (from
     :func:`distribution_spec`) or the axes directly as keywords.
-    However many axes the grid has, it lowers to ONE jitted ``lax.scan``
+    However many axes the grid has, it lowers to ONE jitted simulation
     over the flattened cell batch (``reps`` independent replicas per cell
     are merged into the histograms for variance reduction -- lanes are
-    nearly free next to the scan's step dispatch).  ``base`` supplies
+    nearly free next to the per-step dispatch).  ``base`` supplies
     every unbound channel field (default: a plain DDR channel at the
-    field defaults).
+    field defaults).  ``engine`` picks the simulation engine:
+    ``"timestep"`` (the bit-exact 1-ns reference) or ``"event"`` (the
+    per-request Lindley engine -- several times faster at the same
+    ``steps`` budget, most on narrow batches and low-rho cells; see
+    ``benchmarks/memsim_speed.py``, :mod:`repro.core.memsim` and
+    :func:`crosscheck_engines`).
 
     Example (doctest-sized step budget; real sweeps use the 200k
     default)::
@@ -824,11 +834,11 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
     warmup = memsim.default_warmup(steps) if warmup is None else int(warmup)
     stats = memsim.simulate_cells(
         flat["cha"], overrides=flat["overrides"], steps=steps, seed=seed,
-        warmup=warmup, reps=reps)
+        warmup=warmup, reps=reps, engine=engine)
     return DistributionSweepResult(
         axes=spec.axes, stats=stats.reshape(*spec.shape),
         base=base if base is not None else ChannelConfig(rho=0.5),
-        steps=steps, warmup=warmup, seed=seed, reps=reps)
+        steps=steps, warmup=warmup, seed=seed, reps=reps, engine=engine)
 
 
 #: Default rho anchors for the DES <-> closed-form cross-check.
@@ -847,7 +857,7 @@ CALIBRATION_STDEV_TOL = 1.25
 def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                          cxl_lat_ns: float = 0.0, steps: int = 200_000,
                          seed: int = 0, warmup: int | None = None,
-                         reps: int = 48,
+                         reps: int = 48, engine: str = "timestep",
                          mean_tol: float = CALIBRATION_MEAN_TOL,
                          p90_tol: float = CALIBRATION_P90_TOL,
                          stdev_tol: float = CALIBRATION_STDEV_TOL) -> dict:
@@ -857,7 +867,10 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
     closed form and ``memsim``'s mechanistic DES -- must tell the same
     story.  This runs ONE batched distribution sweep over the rho anchors
     and compares DES mean / p90 / stdev against
-    :func:`queueing.closed_form_stats` at every anchor.
+    :func:`queueing.closed_form_stats` at every anchor.  ``engine``
+    selects the DES engine; BOTH must pass the same gates (the event
+    engine is additionally cross-checked against the timestep engine by
+    :func:`crosscheck_engines`).
 
     Returns ``anchors`` (one row per rho with both values and the
     relative deltas), ``max_abs_mean_err`` / ``max_abs_p90_err`` /
@@ -885,7 +898,7 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                          cxl_lat_ns=float(cxl_lat_ns))
     sw = distribution_sweep(distribution_spec(rho=rhos), base=base,
                             steps=steps, seed=seed, warmup=warmup,
-                            reps=reps)
+                            reps=reps, engine=engine)
     anchors = []
     for r in rhos:
         des = sw.sel(rho=r)
@@ -908,9 +921,63 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
     return dict(anchors=anchors, max_abs_mean_err=max_mean,
                 max_abs_p90_err=max_p90, max_abs_stdev_err=max_stdev,
                 mean_tol=mean_tol, p90_tol=p90_tol, stdev_tol=stdev_tol,
+                engine=engine,
                 ok=bool(max_mean <= mean_tol and max_p90 <= p90_tol
                         and max_stdev <= stdev_tol),
                 sweep=sw)
+
+
+#: Engine-vs-engine agreement gates: the two engines share every law but
+#: not the time axis (1-ns Bernoulli lattice vs continuous-time Poisson
+#: thinning), so they agree statistically, not bitwise; the gates bound
+#: the relative mean / p90 deviation at every anchor.
+ENGINE_MEAN_TOL = 0.10
+ENGINE_P90_TOL = 0.15
+
+
+def crosscheck_engines(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
+                       cxl_lat_ns: float = 0.0, steps: int = 200_000,
+                       seed: int = 0, warmup: int | None = None,
+                       reps: int = 32,
+                       mean_tol: float = ENGINE_MEAN_TOL,
+                       p90_tol: float = ENGINE_P90_TOL) -> dict:
+    """Statistical cross-check of the two memsim engines at the closed-form
+    rho anchors.
+
+    Runs the SAME anchor grid through both engines at the same ``steps``
+    budget (the event engine converts it to its request budget) and
+    gates the relative mean (<= 10%) and p90 (<= 15%) deviation per
+    anchor -- the mechanism-level counterpart of
+    :func:`validate_calibration`'s DES-vs-closed-form gates.  Returns
+    one row per anchor plus ``max_abs_mean_err`` / ``max_abs_p90_err``
+    and an ``ok`` flag.
+    """
+    rhos = tuple(float(r) for r in rhos)
+    base = ChannelConfig(rho=0.5, kappa=float(kappa),
+                         cxl_lat_ns=float(cxl_lat_ns))
+    sweeps = {
+        eng: distribution_sweep(distribution_spec(rho=rhos), base=base,
+                                steps=steps, seed=seed, warmup=warmup,
+                                reps=reps, engine=eng)
+        for eng in memsim.ENGINES}
+    anchors = []
+    for r in rhos:
+        ts = sweeps["timestep"].sel(rho=r)
+        ev = sweeps["event"].sel(rho=r)
+        anchors.append(dict(
+            rho=r,
+            timestep_mean_ns=float(ts.mean_ns),
+            event_mean_ns=float(ev.mean_ns),
+            mean_err=float(ev.mean_ns) / float(ts.mean_ns) - 1.0,
+            timestep_p90_ns=float(ts.p90_ns),
+            event_p90_ns=float(ev.p90_ns),
+            p90_err=float(ev.p90_ns) / float(ts.p90_ns) - 1.0))
+    max_mean = max(abs(a["mean_err"]) for a in anchors)
+    max_p90 = max(abs(a["p90_err"]) for a in anchors)
+    return dict(anchors=anchors, max_abs_mean_err=max_mean,
+                max_abs_p90_err=max_p90, mean_tol=mean_tol,
+                p90_tol=p90_tol, sweeps=sweeps,
+                ok=bool(max_mean <= mean_tol and max_p90 <= p90_tol))
 
 
 # ---------------------------------------------------------------------------

@@ -92,7 +92,8 @@ def resolve_queue_lut(queue_model: str, lut=None):
 
     ``closed_form`` -> ``None`` (the calibrated ``queueing`` closed form);
     ``memsim`` -> the given :class:`repro.core.queuelut.QueueLUT`, or the
-    cached default surface when none is passed.  The runtime import keeps
+    cached default surface when none is passed (built by the DES's
+    per-request event engine at the default grids).  The runtime import keeps
     ``queuelut`` (which builds its tables through ``coaxial``) out of this
     module's import cycle.
     """

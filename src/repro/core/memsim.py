@@ -2,37 +2,63 @@
 
 This is the DRAMsim-ish half of the reproduction: where ``queueing.py`` is a
 *calibrated closed form*, memsim is an *independent mechanism* -- a
-time-stepped (1 ns) simulation of request arrivals, FIFO bus queues, DRAM
-service and CXL interface delays -- implemented as one ``jax.lax.scan`` and
-``vmap``-ed over an arbitrary batch of channel configurations.  It produces
-full latency *distributions* (mean / p50 / p90 / p99 / stdev / CDF), which
-back Fig 2a's load-latency curve and Fig 6b's CDF comparison.
+simulation of request arrivals, FIFO bus queues, DRAM service and CXL
+interface delays, implemented as jitted ``jax.lax.scan`` loops over an
+arbitrary batch of channel configurations.  It produces full latency
+*distributions* (mean / p50 / p90 / p99 / stdev / CDF), which back Fig 2a's
+load-latency curve and Fig 6b's CDF comparison.
 
-Model per channel:
-  * arrivals: two-state MMPP (burst/idle) Bernoulli process per ns; the
-    burst-state rate is ``kappa`` times the average, idle fills the rest;
+TWO ENGINES share one mechanism (same arrival, service and admission laws):
+
+  * ``engine="timestep"`` (the reference): a 1-ns time-stepped scan.  Per
+    nanosecond it draws one fused threefry uniform block, advances the
+    two-state MMPP, flips a Bernoulli arrival coin, and drains the backlog
+    by 1 ns.  It is frozen as the bit-exact reference -- every change to
+    it must reproduce the historical histograms bit for bit -- which is
+    also why it stays expensive: the per-step threefry draw inside the
+    scan is part of its identity.
+  * ``engine="event"`` (the fast engine): one scan iteration per
+    **request** -- the Lindley recursion ``W_{k+1} = max(W_k + S_k - A_k,
+    0)`` over per-request inter-arrival gaps and service draws, roughly
+    ``t_xfer / rho`` fewer iterations than the per-nanosecond loop and no
+    idle steps at low utilization.  Inter-arrival gaps are sampled from
+    the SAME two-state MMPP, with in-gap phase switching handled exactly:
+    the modulating chain is simulated once per call (alternating
+    exponential sojourns), and arrival times come from inverting the
+    piecewise-linear cumulative intensity at unit-exponential increments
+    (the Cox-process construction -- the vectorized equivalent of
+    phase-type gap sampling).  Service uses the same two-slope
+    truncated-Pareto law, the closed-loop ``outstanding`` bound gates the
+    same backlog quantity, and per-request latencies are emitted as scan
+    outputs and histogrammed once post-scan.  The uniform DRAM jitter is
+    additive observation noise (it never feeds the queue), so the event
+    engine convolves its exact distribution into the histogram instead of
+    sampling it -- one fewer uniform per request and strictly lower
+    variance.  The engines agree statistically, not bitwise;
+    ``coaxial.crosscheck_engines`` gates mean/p90 agreement at the
+    closed-form rho anchors.
+
+Model per channel (both engines):
+  * arrivals: two-state MMPP (burst/idle); the burst-state rate is
+    ``kappa`` times the average, idle fills the rest;
   * closed loop: a finite in-flight population ``outstanding`` (MSHR/ROB
     bound per channel) gates ADMISSION -- while the backlog exceeds
     ``outstanding * t_xfer_ns`` of queued work the cores' miss buffers
     are full, so no new request enters the queue (the core stalls
-    instead).  Admitted requests keep their true heavy-tailed waits; what
-    the bound removes is exactly the paper's §3.1 closed-loop effect, the
-    open-loop hyperbola detaching from what a finite machine can observe.
-    The default is unbounded (``inf``), which reproduces the open-loop
-    simulator bit for bit; ``core/queuelut.py`` sweeps this axis to build
-    the closed-loop wait surface ``cpu_model`` consumes;
+    instead).  The default is unbounded (``inf``), the open loop;
+    ``core/queuelut.py`` sweeps this axis to build the closed-loop wait
+    surface ``cpu_model`` consumes;
   * service: the channel serializes one 64B line per ``t_xfer`` ns *on
-    average* (38.4 GB/s -> 1.67 ns), but the effective per-request service
-    is heavy-tailed: with small probability the controller blocks for a
-    two-slope power-law (truncated-Pareto) duration spanning the
-    bank-conflict / turnaround-train scale (tens of ns) through tFAW
-    windows up to refresh (tRFC, ~1 us).  The blocking-size law is what
-    the paper's own Fig-2a closed forms demand: inverting mean and p90
-    through Pollaczek-Khinchine yields a service-excess tail
-    P(S > w) ~ w**-1.8.  Calibration keeps E[S] = t_xfer (so rho keeps
-    its meaning as bus utilization) and matches the M/G/1 mean-wait
-    anchor W(0.5) ~= 80 ns
-    (``coaxial.validate_calibration`` checks mean AND p90 per anchor);
+    average* (38.4 GB/s -> 1.67 ns), but with small probability the
+    controller blocks for a two-slope power-law (truncated-Pareto)
+    duration spanning the bank-conflict scale through tFAW windows up to
+    refresh.  The blocking-size law is what the paper's own Fig-2a closed
+    forms demand: inverting mean and p90 through Pollaczek-Khinchine
+    yields a service-excess tail P(S > w) ~ w**-1.8.  Calibration keeps
+    E[S] = t_xfer (so rho keeps its meaning as bus utilization) and
+    matches the M/G/1 mean-wait anchor W(0.5) ~= 80 ns
+    (``coaxial.validate_calibration`` checks mean AND p90 per anchor,
+    for either engine);
   * DRAM access: base latency plus uniform bank/row-state jitter;
   * CXL: a fixed interface premium plus the link-traversal time.
 
@@ -40,15 +66,24 @@ Every calibration constant is also a per-channel *field* of
 :class:`ChannelConfig` / :class:`ChannelArrays` (the module-level constants
 are just the defaults), so any of them can be a named sweep axis:
 ``sweepspec.distribution_spec(rho=..., kappa=..., stall_ns=...)`` lowers to
-ONE jitted scan over the flattened cell batch, with NaN-masked overrides
-applied branch-free in-trace exactly like ``cpu_model``'s design overrides.
+ONE jitted simulation over the flattened cell batch, with NaN-masked
+overrides applied branch-free in-trace exactly like ``cpu_model``'s design
+overrides.
 
-The first ``warmup`` ns (default ``steps // 10``) are excluded from the
-histogram: the simulation starts with an empty queue, so without a warmup
-window the cold-start transient biases means and low-rho quantiles down.
+The first ``warmup`` ns of simulated time (default ``steps // 10``) are
+excluded from the histogram: the simulation starts with an empty queue, so
+without a warmup window the cold-start transient biases means and low-rho
+quantiles down.
+
+Budgets are engine-neutral: ``steps`` is the simulated-time budget in ns.
+The event engine converts it to a request budget with
+:func:`events_for_steps` (``EVENTS_PER_NS`` requests per ns -- the arrival
+rate of the rho = 0.5 reference channel, the repo's calibration anchor),
+so one knob -- and one ``REPRO_DES_STEPS`` cap -- throttles both engines
+coherently.
 
 All randomness is threefry-derived from an explicit seed: runs are exactly
-reproducible.
+reproducible per engine (the two engines draw different streams).
 """
 
 from __future__ import annotations
@@ -99,9 +134,49 @@ STALL_MAX_NS = 1903.7
 #: Floor on the non-penalized per-request service time (ns).
 MIN_SERVICE_NS = 0.05
 
-#: Default warmup fraction: the leading ``steps // WARMUP_DIV`` ns are
-#: simulated but not recorded.
+#: Default warmup fraction: the leading ``steps // WARMUP_DIV`` ns of
+#: simulated time are simulated but not recorded (both engines).
 WARMUP_DIV = 10
+
+#: The two simulation engines (see module docstring).
+ENGINES = ("timestep", "event")
+
+#: Event-engine candidate budget per simulated ns: the candidate-arrival
+#: intensity of the rho = 0.5 reference channel (the repo's W(0.5)
+#: calibration anchor).  The event engine samples arrivals on the SAME
+#: 1-ns lattice as the timestep engine -- a Bernoulli(p) lattice equals a
+#: Poisson stream of intensity ``-ln(1-p)`` with same-cell arrivals
+#: merged -- so the candidate intensity at the p = 0.3 anchor is
+#: ``-ln(0.7)``.  ``steps`` ns of timestep budget and ``steps *
+#: EVENTS_PER_NS`` candidates of event budget record the same number of
+#: samples over the same simulated horizon at that anchor.
+EVENTS_PER_NS = 0.35667
+
+#: Steps per emission chunk of the timestep engine: the scan emits
+#: ``(latency, mask)`` per step (no in-loop histogram scatter); chunking
+#: bounds the emission buffer at ``_TS_CHUNK * cells`` floats.
+_TS_CHUNK = 8192
+#: Requests per chunk of the event engine: adaptive so the chunk's
+#: working set (~a dozen ``chunk x cells`` f32 arrays) stays cache-sized
+#: at any batch width -- wide LUT-build batches take smaller chunks,
+#: narrow test batches take larger ones.
+_EV_CHUNK_ELEMS = 5_000_000
+_EV_CHUNK_MIN, _EV_CHUNK_MAX = 1024, 16384
+
+
+def _event_chunk_len(n: int) -> int:
+    c = _EV_CHUNK_MIN
+    while c < _EV_CHUNK_MAX and c * 2 * n <= _EV_CHUNK_ELEMS:
+        c *= 2
+    return c
+#: Event engine: one MMPP sojourn is simulated per this many candidates
+#: (the modulating chain is ~100x slower than arrivals, so the chain
+#: stays a rounding error of the candidate budget, and sizing it from
+#: the budget alone keeps the kernel's trace independent of the axis
+#: VALUES -- the one-trace-per-grid invariant).  Past the sampled chain
+#: -- only reachable below rho ~0.05 at default budgets -- the appended
+#: tail segment carries the average rate.
+_SOJOURN_DIV = 48
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,9 +211,9 @@ class ChannelArrays(NamedTuple):
     """Pytree of per-channel simulation parameters, ``(N,)`` float leaves.
 
     Mirrors :class:`cpu_model.MemSystemArrays`: :class:`ChannelConfig` is
-    the frozen-dataclass façade for humans, this is what the jitted scan
-    consumes -- one leading cell axis shared by every leaf, so any named-
-    axis grid flattens to one batch.
+    the frozen-dataclass façade for humans, this is what the jitted
+    simulation consumes -- one leading cell axis shared by every leaf, so
+    any named-axis grid flattens to one batch.
     """
 
     rho: jnp.ndarray
@@ -176,14 +251,27 @@ def _apply_channel_overrides(cha: ChannelArrays, ov) -> ChannelArrays:
         for f, v in ov.items()})
 
 
-#: Number of times the jitted simulator has been TRACED (not called).  A
-#: trace only happens on a new (cell count, steps) pair, so a whole
-#: named-axis distribution grid bumps this by exactly one; tests pin that.
-_TRACE_COUNT = [0]
+#: Number of times each engine's jitted chunk kernel has been TRACED (not
+#: called).  A trace only happens on a new flattened cell count (the chunk
+#: length is a module constant, and the event engine's sojourn count
+#: derives from the request budget), so a whole named-axis distribution
+#: grid bumps its engine's counter by exactly one; tests pin that.
+_TRACE_COUNT = {"timestep": 0, "event": 0}
 
 
-def sim_trace_count() -> int:
-    return _TRACE_COUNT[0]
+def sim_trace_count(engine: str | None = None) -> int:
+    """Trace count for one engine, or the sum over both when ``engine``
+    is omitted."""
+    if engine is None:
+        return sum(_TRACE_COUNT.values())
+    _check_engine(engine)
+    return _TRACE_COUNT[engine]
+
+
+def _check_engine(engine: str) -> str:
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    return engine
 
 
 def _pareto_seg(ratio, a):
@@ -201,18 +289,13 @@ def _pareto_seg(ratio, a):
     return jnp.where(near_one, -jnp.log(ratio), (1.0 - ratio ** safe) / safe)
 
 
-def _sim_core(cha: ChannelArrays, ov, keys, record):
-    """Run ``len(keys)`` ns for a batch of channels; return histograms.
+def _channel_terms(c: ChannelArrays) -> dict:
+    """Derived per-channel quantities shared by both engines.
 
-    ``cha`` leaves are ``(N,)``; ``ov`` maps channel fields to ``(N,)``
-    NaN-masked overrides (NaN = keep the channel's own value), applied
-    inside the trace so the jit cache keys on the flattened cell count and
-    step count alone.  ``record`` is a per-step 0/1 mask (the warmup
-    window is simulated but not histogrammed).
+    The SAME laws feed both engines: MMPP rates and switching
+    probabilities, the two-slope blocking tail, and the small-service
+    level that keeps E[S] exactly ``t_xfer``.
     """
-    _TRACE_COUNT[0] += 1  # side effect runs at trace time only
-    c = _apply_channel_overrides(cha, ov)
-    n = c.rho.shape[0]
     rate_avg = c.rho / c.t_xfer_ns               # arrivals per ns
     rate_hi = jnp.minimum(c.kappa * rate_avg, 0.98)
     # Rate in the idle state so the duty-weighted mean matches rate_avg.
@@ -221,7 +304,6 @@ def _sim_core(cha: ChannelArrays, ov, keys, record):
     p_leave = 1.0 / c.burst_sojourn_ns           # state-switch prob per ns
     # Duty-correct entry prob: stationary P(burst) = burst_duty.
     p_enter = p_leave * c.burst_duty / (1.0 - c.burst_duty)
-
     # Two-slope truncated-Pareto blocking durations.  Survival:
     # (sn/x)**a1 up to the break, then q_b * (xb/x)**a2, capped at the
     # max.  The capped mean (closed form, computed in-trace) lets s_small
@@ -234,10 +316,54 @@ def _sim_core(cha: ChannelArrays, ov, keys, record):
     s_small = ((c.t_xfer_ns - c.stall_prob * stall_mean) /
                (1.0 - c.stall_prob))
     s_small = jnp.maximum(s_small, MIN_SERVICE_NS)
+    # Lattice candidate intensities for the event engine: a Bernoulli(p)
+    # per-ns arrival process equals a Poisson stream of intensity
+    # -ln(1-p) whose same-cell arrivals are merged, so both engines draw
+    # from the SAME per-ns gap law.
+    lam_hi = -jnp.log1p(-rate_hi)
+    lam_lo = -jnp.log1p(-rate_lo)
+    lam_avg = -jnp.log1p(-jnp.minimum(rate_avg, 0.98))
+    return dict(rate_avg=rate_avg, rate_hi=rate_hi, rate_lo=rate_lo,
+                p_leave=p_leave, p_enter=p_enter, q_b=q_b,
+                s_small=s_small, lam_hi=lam_hi, lam_lo=lam_lo,
+                lam_avg=lam_avg)
+
+
+# ---------------------------------------------------------------------------
+# Timestep engine: the bit-exact 1-ns reference.
+# ---------------------------------------------------------------------------
+
+def _ts_chunk_core(cha: ChannelArrays, ov, state, keys, record):
+    """One emission chunk of the time-stepped reference engine.
+
+    The scan body is the historical per-nanosecond step, bit for bit --
+    same per-step threefry keys, same fused ``(5, n)`` uniform draw, same
+    arithmetic -- except that instead of scatter-updating a histogram
+    carried through the scan it EMITS ``(latency, arrive * record)`` and
+    the histogram indices are produced post-scan, vectorized over the
+    whole chunk (the host accumulates them with one ``bincount``).
+    Dropping the ``(n, N_BINS)`` carry is the whole micro-opt: the counts
+    are small integers, exact in either accumulation order, so results
+    stay bit-identical while the scan stops copying a histogram per
+    nanosecond.
+    """
+    _TRACE_COUNT["timestep"] += 1  # side effect runs at trace time only
+    c = _apply_channel_overrides(cha, ov)
+    n = c.rho.shape[0]
+    t = _channel_terms(c)
+    rate_hi, rate_lo = t["rate_hi"], t["rate_lo"]
+    p_leave, p_enter = t["p_leave"], t["p_enter"]
+    q_b, s_small = t["q_b"], t["s_small"]
+    sn, xb = c.stall_ns, c.stall_break_ns
+    a1, a2, cap = c.stall_alpha, c.stall_alpha2, c.stall_max_ns
+
+    # Strong-typed 0/1 so the carry dtype is stable across chunk calls
+    # (a weak-typed literal would force a second trace of the kernel).
+    zero, one = jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32)
 
     def step(carry, xs):
         key, rec = xs
-        backlog, in_burst, hist = carry
+        backlog, in_burst = carry
         # One fused threefry draw per step (fewer key derivations than
         # split-per-stream): rows are switch / arrival / jitter /
         # blocking-or-not / blocking size.
@@ -245,8 +371,8 @@ def _sim_core(cha: ChannelArrays, ov, keys, record):
             jax.random.uniform(key, (5, n))
         in_burst = jnp.where(
             in_burst > 0.5,
-            jnp.where(switch_u < p_leave, 0.0, 1.0),
-            jnp.where(switch_u < p_enter, 1.0, 0.0))
+            jnp.where(switch_u < p_leave, zero, one),
+            jnp.where(switch_u < p_enter, one, zero))
         rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
         arrive = (arrive_u < rate).astype(jnp.float32)
         # Closed-loop population bound: while the backlog holds more than
@@ -257,8 +383,6 @@ def _sim_core(cha: ChannelArrays, ov, keys, record):
                            ).astype(jnp.float32)
         jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns
         latency = backlog + c.service_ns + 2.0 + jitter + c.cxl_lat_ns
-        bin_idx = jnp.clip((latency / BIN_NS).astype(jnp.int32), 0, N_BINS - 1)
-        hist = hist.at[jnp.arange(n), bin_idx].add(arrive * rec)
         # Inverse-CDF sample of the two-slope law: the uniform IS the
         # survival value -- above q_b the first slope applies, below it
         # the far tail, capped at the max.
@@ -268,15 +392,209 @@ def _sim_core(cha: ChannelArrays, ov, keys, record):
         stall = jnp.minimum(stall, cap)
         svc = jnp.where(svc_u < c.stall_prob, stall, s_small)
         backlog = jnp.maximum(backlog + arrive * svc - 1.0, 0.0)
-        return (backlog, in_burst, hist), None
+        return (backlog, in_burst), (latency, arrive * rec)
 
-    init = (jnp.zeros(n), jnp.ones(n), jnp.zeros((n, N_BINS)))
-    (_, _, hist), _ = jax.lax.scan(step, init, (keys, record))
-    return hist
+    state, (lat, mask) = jax.lax.scan(step, state, (keys, record))
+    return state, _flat_bins(lat, mask > 0.0, c)
 
 
-_sim_jit = jax.jit(_sim_core)
+def _flat_bins(lat, rec, c: ChannelArrays):
+    """Post-scan vectorized histogram indices for one chunk.
 
+    ``lat``/``rec`` are ``(C, n)``; returns flattened ``lane * N_BINS +
+    bin`` int32 indices with unrecorded entries parked in one overflow
+    slot (``n * N_BINS``) -- the host drops it after ``bincount``, so no
+    boolean compaction is needed on either side.
+    """
+    n = c.rho.shape[0]
+    bins = jnp.clip((lat * (1.0 / BIN_NS)).astype(jnp.int32), 0, N_BINS - 1)
+    off = (jnp.arange(n, dtype=jnp.int32) * N_BINS)[None, :]
+    return jnp.where(rec, bins + off, n * N_BINS)
+
+
+_ts_chunk_jit = jax.jit(_ts_chunk_core)
+
+
+# ---------------------------------------------------------------------------
+# Event engine: per-request Lindley scan.
+# ---------------------------------------------------------------------------
+
+def _event_tables(cha: ChannelArrays, ov, key, n_sojourns: int):
+    """Simulate the MMPP modulating chain once per call (per lane).
+
+    Alternating exponential sojourns starting in the burst state; returns
+    per-lane ``(M+1,)`` rows of cumulative intensity ``L``, boundary time
+    ``T`` and segment rate -- the piecewise-linear cumulative-intensity
+    table the chunk kernel inverts.  The appended final segment extends
+    to infinity at the average rate, so lanes whose horizon outruns the
+    sampled chain degrade to uncorrelated (but rate-exact) arrivals
+    instead of running dry.
+    """
+    c = _apply_channel_overrides(cha, ov)
+    n = c.rho.shape[0]
+    t = _channel_terms(c)
+    su = jax.random.uniform(key, (n_sojourns, n), minval=1e-12)
+    burst = (jnp.arange(n_sojourns) % 2 == 0)[:, None]
+    soj = -jnp.log(su) * jnp.where(burst, 1.0 / t["p_leave"],
+                                   1.0 / t["p_enter"])
+    rate_m = jnp.where(burst, t["lam_hi"], t["lam_lo"])
+    T0 = jnp.concatenate([jnp.zeros((1, n)), jnp.cumsum(soj, axis=0)])
+    L0 = jnp.concatenate([jnp.zeros((1, n)),
+                          jnp.cumsum(rate_m * soj, axis=0)])
+    rate_seg = jnp.concatenate(
+        [rate_m, jnp.maximum(t["lam_avg"], 1e-9)[None]])
+    # (n, M+1) intensity rows for searchsorted + one packed gather table.
+    return L0.T, jnp.stack([T0.T, L0.T, rate_seg.T], axis=-1)
+
+
+_event_tables_jit = jax.jit(_event_tables, static_argnames=("n_sojourns",))
+
+
+def _event_chunk_core(cha: ChannelArrays, ov, state, key, tabs, warmup_ns,
+                      chunk: int):
+    """One chunk of the per-request Lindley engine.
+
+    Per candidate request, in vectorized passes: a unit-exponential
+    increment of cumulative intensity, inverted through the MMPP's
+    piecewise-linear intensity table to a continuous arrival time (exact
+    in-gap phase switching -- the Cox construction), then CEILED onto the
+    timestep engine's 1-ns lattice (candidates sharing a cell merge into
+    one arrival, which is exactly the Bernoulli-per-ns arrival law, gap
+    by gap); a service draw from the shared two-slope law (selection and
+    size from ONE uniform: conditioned on ``u < stall_prob``,
+    ``u / stall_prob`` is again uniform).  The only sequential part is
+    the Lindley/admission recursion itself -- a four-op scan body:
+
+        W <- max(W - A_k, 0);  admit = W <= outstanding * t_xfer;
+        emit W;                W <- W + admit * S_k
+
+    (phantom same-cell candidates carry ``A = 0``, ``S = 0`` and are
+    masked out of the histogram, so they are invisible to the queue).
+    Latencies are ``W`` plus the deterministic access terms; the uniform
+    DRAM jitter is convolved into the histogram afterwards (it never
+    feeds the queue).
+    """
+    _TRACE_COUNT["event"] += 1  # side effect runs at trace time only
+    c = _apply_channel_overrides(cha, ov)
+    n = c.rho.shape[0]
+    t = _channel_terms(c)
+    q_b, s_small = t["q_b"], t["s_small"]
+    sn, xb = c.stall_ns, c.stall_break_ns
+    a1, a2, cap = c.stall_alpha, c.stall_alpha2, c.stall_max_ns
+    log_qb = jnp.log(q_b)
+    bound = c.outstanding * c.t_xfer_ns
+    Lt, packed = tabs
+    m = Lt.shape[1] - 1
+
+    W, u_last, t_last = state
+    u = jax.random.uniform(key, (2, chunk, n), minval=1e-12)
+    lg = jnp.log(u)                       # one fused pass for both rows
+    # Arrival times: unit-exponential increments of cumulative intensity,
+    # inverted through the per-lane piecewise-linear table.  The queries
+    # are SORTED along the chunk, so instead of a per-request binary
+    # search the few boundaries are positioned among the many requests
+    # (one small searchsorted per lane) and the per-request segment index
+    # is recovered as a scatter + cumulative count -- the segment of
+    # request k is #{j : L0[j] < U_k} - 1, a staircase in k.
+    upos = u_last[None, :] + jnp.cumsum(-lg[0], axis=0)           # (C, n)
+    ut = upos.T                                                   # (n, C)
+    pos = jax.vmap(lambda q, l: jnp.searchsorted(q, l, side="right")
+                   )(ut, Lt)                                      # (n, M+1)
+    cnt = jnp.zeros((n, chunk + 1), jnp.int32)
+    cnt = cnt.at[jnp.arange(n)[:, None], pos].add(1)
+    seg = jnp.clip(jnp.cumsum(cnt[:, :chunk], axis=1) - 1, 0, m)
+    tab = jnp.take_along_axis(packed, seg[..., None], axis=1)     # (n, C, 3)
+    arr_t = jnp.ceil((tab[..., 0] + (ut - tab[..., 1]) /
+                      jnp.maximum(tab[..., 2], 1e-12)).T)  # lattice cell
+    gaps = jnp.diff(jnp.concatenate([t_last[None, :], arr_t], axis=0),
+                    axis=0)
+    real = gaps > 0.5                  # same-cell candidates merge
+    # Service: one uniform for selection AND size (conditioned on
+    # ``u < stall_prob``, ``u / stall_prob`` is again uniform), one log +
+    # one exp for the whole two-slope inverse CDF (the slope pick happens
+    # in log space).
+    us = u[1]
+    lu = lg[1] - jnp.log(c.stall_prob)
+    log_stall = jnp.where(us > q_b * c.stall_prob,
+                          jnp.log(sn) - lu / a1,
+                          jnp.log(xb) + (log_qb - lu) / a2)
+    svc = jnp.where(us < c.stall_prob,
+                    jnp.minimum(jnp.exp(log_stall), cap), s_small)
+    svc = jnp.where(real, svc, 0.0)    # phantoms add no work
+
+    def event(wc, xs):
+        gap, s = xs
+        wc = jnp.maximum(wc - gap, 0.0)
+        return wc + jnp.where(wc <= bound, s, 0.0), wc
+
+    W, wq = jax.lax.scan(event, W, (gaps, svc), unroll=8)
+    # The emitted wait IS the admission witness: recompute the bound test
+    # vectorized instead of emitting a second buffer from the scan.
+    # Lattice cell k is recorded iff the timestep engine would record
+    # step k-1, i.e. past the warmup window.
+    lat = wq + c.service_ns + 2.0 + c.cxl_lat_ns
+    rec = real & (wq <= bound) & (arr_t > warmup_ns + 0.5)
+    return (W, upos[-1], arr_t[-1]), _flat_bins(lat, rec, c)
+
+
+_event_chunk_jit = jax.jit(_event_chunk_core, static_argnames=("chunk",))
+
+
+def events_for_steps(steps: int) -> int:
+    """Event-engine request budget equivalent to ``steps`` ns of timestep
+    budget (see :data:`EVENTS_PER_NS`).  The driver rounds it up to whole
+    chunks of the batch's (width-adaptive) chunk length."""
+    return max(_EV_CHUNK_MIN, int(round(steps * EVENTS_PER_NS)))
+
+
+def _jitter_kernel(width: np.ndarray) -> np.ndarray:
+    """Per-lane histogram kernel of the uniform(-w, w) DRAM jitter.
+
+    Tap ``k`` holds the overlap of bin offset ``[k*BIN - BIN/2, k*BIN +
+    BIN/2)`` with the jitter support, so convolving a histogram with the
+    kernel equals sampling the jitter per request, up to half-bin
+    quantization.  Zero width degrades to the identity kernel.
+    """
+    width = np.asarray(width, np.float64)
+    taps = int(np.ceil(np.max(width, initial=0.0) / BIN_NS)) + 1
+    k = np.arange(-taps, taps + 1, dtype=np.float64)
+    wide = width[:, None] >= 1e-9
+    w = np.where(wide, width[:, None], 1.0)
+    lo = np.maximum(k[None, :] * BIN_NS - BIN_NS / 2, -w)
+    hi = np.minimum(k[None, :] * BIN_NS + BIN_NS / 2, w)
+    kern = np.maximum(hi - lo, 0.0) / (2.0 * w)
+    kern = np.where(wide, kern, (k == 0.0)[None, :])
+    return kern
+
+
+def _convolve_jitter(hist: np.ndarray, width: np.ndarray) -> np.ndarray:
+    """Convolve per-lane histograms with their jitter kernels, clamping
+    shifted-out mass into the edge bins (mass is conserved exactly)."""
+    kern = _jitter_kernel(width)
+    taps = (kern.shape[1] - 1) // 2
+    out = np.zeros_like(hist, np.float64)
+    nb = hist.shape[-1]
+    for i, kk in enumerate(range(-taps, taps + 1)):
+        w = kern[:, i][:, None]
+        if not np.any(w > 0):
+            continue
+        if kk >= nb:               # shift beyond the span: all mass clamps
+            out[:, -1:] += hist.sum(axis=1, keepdims=True) * w
+        elif kk <= -nb:
+            out[:, :1] += hist.sum(axis=1, keepdims=True) * w
+        elif kk >= 0:
+            out[:, kk:] += hist[:, :nb - kk] * w
+            if kk > 0:
+                out[:, -1:] += hist[:, nb - kk:].sum(axis=1, keepdims=True) * w
+        else:
+            out[:, :kk] += hist[:, -kk:] * w
+            out[:, :1] += hist[:, :-kk].sum(axis=1, keepdims=True) * w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared driver + statistics.
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class LatencyStats:
@@ -354,23 +672,100 @@ def _nan_overrides(n: int) -> dict:
     return {f: nans for f in CHANNEL_FIELDS}
 
 
+def _accumulate_chunks(dispatch, n_chunks: int, n: int) -> np.ndarray:
+    """Drive the per-chunk kernel and histogram its emissions.
+
+    ``dispatch(k)`` runs chunk ``k`` and returns the flattened histogram
+    indices (asynchronously); the host folds each chunk into the counts
+    with one integer ``bincount`` while the next chunk computes, then
+    drops the overflow slot.  Counts are exact integers, so accumulation
+    order cannot perturb them.
+    """
+    hist = np.zeros(n * N_BINS + 1, np.int64)
+    pending = dispatch(0)
+    for k in range(1, n_chunks):
+        nxt = dispatch(k)           # async: overlaps the bincount below
+        hist += np.bincount(np.asarray(pending).reshape(-1),
+                            minlength=n * N_BINS + 1)
+        pending = nxt
+    hist += np.bincount(np.asarray(pending).reshape(-1),
+                        minlength=n * N_BINS + 1)
+    return hist[:-1].reshape(n, N_BINS).astype(np.float64)
+
+
+def _run_timestep(cha, ov, steps, seed, warmup):
+    n = int(np.shape(cha.rho)[0])
+    pad = (-steps) % _TS_CHUNK
+    keys = np.zeros((steps + pad, 2), np.uint32)
+    keys[:steps] = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
+                                               steps))
+    record = np.zeros(steps + pad, np.float32)
+    record[warmup:steps] = 1.0
+    state = (jnp.zeros(n), jnp.ones(n))
+    chunks = []
+
+    def dispatch(k):
+        nonlocal state
+        sl = slice(k * _TS_CHUNK, (k + 1) * _TS_CHUNK)
+        state, flat = _ts_chunk_jit(cha, ov, state,
+                                    jnp.asarray(keys[sl]),
+                                    jnp.asarray(record[sl]))
+        return flat
+
+    return _accumulate_chunks(dispatch, (steps + pad) // _TS_CHUNK, n)
+
+
+def _run_event(cha, ov, steps, seed, warmup, events):
+    n = int(np.shape(cha.rho)[0])
+    chunk = _event_chunk_len(n)
+    n_chunks = -(-events // chunk)
+    n_sojourns = max(64, (n_chunks * chunk) // _SOJOURN_DIV)
+    phase_key, chunk_root = jax.random.split(jax.random.PRNGKey(seed))
+    keys = jax.random.split(chunk_root, n_chunks)
+    tabs = _event_tables_jit(cha, ov, phase_key, n_sojourns)
+    state = (jnp.zeros(n), jnp.zeros(n), jnp.zeros(n))
+    warm = jnp.float32(warmup)
+
+    def dispatch(k):
+        nonlocal state
+        state, flat = _event_chunk_jit(cha, ov, state, keys[k], tabs, warm,
+                                       chunk=chunk)
+        return flat
+
+    hist = _accumulate_chunks(dispatch, n_chunks, n)
+    # Jitter is additive observation noise: convolve its exact uniform
+    # distribution into the histogram (per-lane effective width).
+    width = np.where(np.isnan(np.asarray(ov["service_jitter_ns"])),
+                     np.asarray(cha.service_jitter_ns),
+                     np.asarray(ov["service_jitter_ns"]))
+    return _convolve_jitter(hist, width)
+
+
 def simulate_cells(cha: ChannelArrays, *, overrides=None,
                    steps: int = 200_000, seed: int = 0,
-                   warmup: int | None = None, reps: int = 1) -> LatencyStats:
-    """Simulate N flattened cells in one jitted scan.
+                   warmup: int | None = None, reps: int = 1,
+                   engine: str = "timestep",
+                   events: int | None = None) -> LatencyStats:
+    """Simulate N flattened cells in one jitted batch.
 
     ``cha`` leaves are ``(N,)``; ``overrides`` maps channel fields to
     ``(N,)`` arrays with NaN meaning "keep the channel's own value".
     Missing override fields are filled with NaN so the jit cache keys on
-    ``(N * reps, steps)`` alone -- any axis combination of the same
-    flattened size and step count shares one compile.  ``warmup`` ns
-    (default ``steps // 10``) are simulated but excluded from the
-    histograms.  ``reps`` runs that many independent replicas of every
-    cell in the same batch (the per-step uniforms are independent across
-    lanes) and merges their histograms -- variance reduction that costs
-    almost nothing, since the scan's step dispatch dominates over lane
-    count.
+    the flattened cell count alone -- any axis combination of the same
+    flattened size shares one compile per engine.
+
+    ``steps`` is the simulated-time budget in ns for EITHER engine;
+    ``engine="event"`` converts it to a per-request budget
+    (:func:`events_for_steps`) unless ``events`` pins one explicitly.
+    ``warmup`` ns of simulated time (default ``steps // 10``) are
+    excluded from the histograms.  ``reps`` runs that many independent
+    replicas of every cell in the same batch and merges their histograms
+    -- variance reduction that costs almost nothing next to the per-step
+    (or per-request) dispatch.  Results are exactly reproducible per
+    ``(engine, seed, budget, N)``; the two engines draw different
+    streams and agree statistically, not bitwise.
     """
+    _check_engine(engine)
     n = int(np.shape(cha.rho)[0])
     reps = int(reps)
     if reps < 1:
@@ -379,39 +774,47 @@ def simulate_cells(cha: ChannelArrays, *, overrides=None,
     if not 0 <= warmup < steps:
         raise ValueError(f"warmup must be in [0, steps); got {warmup} "
                          f"with steps={steps}")
+    if events is not None and engine != "event":
+        raise ValueError("events is an event-engine budget; use steps "
+                         "for the timestep engine")
     tile = lambda v: jnp.tile(jnp.asarray(np.asarray(v, np.float32)), reps)
     ov = _nan_overrides(n * reps)
     ov.update({f: tile(v) for f, v in (overrides or {}).items()})
     cha = ChannelArrays(*(tile(leaf) for leaf in cha))
-    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    record = (jnp.arange(steps) >= warmup).astype(jnp.float32)
-    hist = _sim_jit(cha, ov, keys, record)
-    hist = np.asarray(hist, np.float64).reshape(reps, n, -1).sum(axis=0)
+    if engine == "timestep":
+        hist = _run_timestep(cha, ov, int(steps), seed, warmup)
+    else:
+        events = (events_for_steps(steps) if events is None
+                  else max(1, int(events)))
+        hist = _run_event(cha, ov, int(steps), seed, warmup, events)
+    hist = hist.reshape(reps, n, -1).sum(axis=0)
     return _stats_from_hist(hist)
 
 
 def simulate(configs, steps: int = 200_000, seed: int = 0,
-             warmup: int | None = None, reps: int = 1) -> LatencyStats:
+             warmup: int | None = None, reps: int = 1,
+             engine: str = "timestep") -> LatencyStats:
     """Simulate a batch of :class:`ChannelConfig` and return stats.
 
     Thin shim over :func:`simulate_cells` -- bit-identical to any
     distribution sweep whose flat cells match ``configs`` in order (same
-    seed, steps, warmup and reps => same threefry streams).
+    engine, seed, steps, warmup and reps => same random streams).
     """
     return simulate_cells(stack_channels(configs), steps=steps, seed=seed,
-                          warmup=warmup, reps=reps)
+                          warmup=warmup, reps=reps, engine=engine)
 
 
 def load_latency_curve(rhos=None, kappa: float = 1.0, cxl_lat_ns: float = 0.0,
                        steps: int = 200_000, seed: int = 0,
-                       warmup: int | None = None, reps: int = 1) -> dict:
+                       warmup: int | None = None, reps: int = 1,
+                       engine: str = "timestep") -> dict:
     """Fig 2a: mean/p90 latency vs bus utilization for one channel type."""
     if rhos is None:
         rhos = np.linspace(0.05, 0.95, 19)
     configs = [ChannelConfig(rho=float(r), kappa=kappa,
                              cxl_lat_ns=cxl_lat_ns) for r in rhos]
     stats = simulate(configs, steps=steps, seed=seed, warmup=warmup,
-                     reps=reps)
+                     reps=reps, engine=engine)
     return dict(rho=np.asarray(rhos), mean_ns=stats.mean_ns,
                 p90_ns=stats.p90_ns, p99_ns=stats.p99_ns,
                 stdev_ns=stats.stdev_ns)

@@ -21,9 +21,13 @@ count) and ``design_gradient`` can differentiate through the fixed point
 form; the pytree-structure difference is what keys the jit cache, no
 static flags needed.
 
-Build cost: the default surface (12 x 5 x 5 grid) is one jitted
-``lax.scan``; :func:`default_queue_lut` caches it per
-(steps, seed, reps), so a whole session pays for it once.
+Build cost: the default surface (14 x 6 x 6 grid) is one batched run of
+the per-request event engine (``memsim.ENGINES``; the finer-than-PR-4
+grid is what the event engine's speedup buys -- measured width-dependent
+on CPU by ``benchmarks/memsim_speed.py``, roughly 3.5x on this build's
+wide batch and far larger on narrow ones); :func:`default_queue_lut`
+caches it per (steps, seed, reps, engine), so a whole session pays for
+it once.
 """
 
 from __future__ import annotations
@@ -38,19 +42,29 @@ from repro.core import hw
 
 #: Default utilization grid: denser near saturation, where the open-loop
 #: hyperbola is steep and linear interpolation would otherwise smear the
-#: knee of the load-latency curve.
-DEFAULT_RHO_GRID = (0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.65, 0.72,
-                    0.78, 0.84, 0.89, 0.93)
+#: knee of the load-latency curve.  One notch finer than the original
+#: 12-point grid (extra knee points at 0.62..0.91) -- affordable because
+#: the default build engine is the per-request event engine, the first
+#: step of the ROADMAP's LUT-resolution study.
+DEFAULT_RHO_GRID = (0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.62, 0.68,
+                    0.74, 0.79, 0.84, 0.88, 0.91, 0.93)
 #: Default burstiness grid (covers the Table-4 suite values 1.3..1.6 and
-#: the synthetic-sweep range up to 3.2).
-DEFAULT_KAPPA_GRID = (1.0, 1.3, 1.6, 2.2, 3.2)
+#: the synthetic-sweep range up to 3.2; 2.7 fills the former 2.2 -> 3.2
+#: gap).
+DEFAULT_KAPPA_GRID = (1.0, 1.3, 1.6, 2.2, 2.7, 3.2)
 #: Default closed-loop population grid: ``n_active * MAX_MLP /
 #: dram_channels`` spans ~2 (8 channels, 1 core) to 192 (the 12-core,
-#: 1-channel DDR baseline).
-DEFAULT_OUTSTANDING_GRID = (2.0, 8.0, 24.0, 64.0, 192.0)
+#: 1-channel DDR baseline); geometric-ish spacing (the tight-bound end
+#: is where the wait surface curves hardest).
+DEFAULT_OUTSTANDING_GRID = (2.0, 4.0, 8.0, 24.0, 64.0, 192.0)
 #: Default DES budget per cell (ns simulated) and replicas per cell.
 DEFAULT_STEPS = 120_000
 DEFAULT_REPS = 2
+#: Default build engine: the per-request event engine (the timestep
+#: reference builds the same surface several times slower --
+#: ``benchmarks/memsim_speed.py`` times both and cross-checks the
+#: tables).
+DEFAULT_ENGINE = "event"
 
 
 class QueueLUT(NamedTuple):
@@ -147,14 +161,19 @@ def _check_grid(name, grid):
 def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
                     outstanding=DEFAULT_OUTSTANDING_GRID,
                     steps: int = DEFAULT_STEPS, seed: int = 0,
-                    reps: int = DEFAULT_REPS, base=None) -> QueueLUT:
+                    reps: int = DEFAULT_REPS, base=None,
+                    engine: str = DEFAULT_ENGINE) -> QueueLUT:
     """Run ONE batched distribution sweep and reduce it to a QueueLUT.
 
     The whole (rho x kappa x outstanding) grid lowers to one jitted
-    ``lax.scan`` (``coaxial.distribution_sweep``); the wait tables are
+    simulation (``coaxial.distribution_sweep``); the wait tables are
     the DES latency means/p90s minus the unloaded DRAM service time, and
     the sigma table is the DES latency stdev verbatim -- the measured
     replacement for ``queueing.stdev_latency_ns``'s heuristic.
+    ``engine`` picks the memsim engine; the default is the per-request
+    event engine, which is what makes the default grid's resolution
+    affordable (``benchmarks/memsim_speed.py`` times the same build on
+    both engines and cross-checks the resulting tables).
 
     Example (tiny grid, doctest-sized budget)::
 
@@ -173,7 +192,8 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
     outstanding = _check_grid("outstanding", outstanding)
     sw = coaxial.distribution_sweep(
         rho=rho, kappa=kappa, outstanding=outstanding,
-        base=base, steps=int(steps), seed=int(seed), reps=int(reps))
+        base=base, steps=int(steps), seed=int(seed), reps=int(reps),
+        engine=engine)
     stats = sw.stats
     to_j = lambda x: jnp.asarray(np.asarray(x, np.float64))
     return QueueLUT(
@@ -186,10 +206,13 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
 
 @functools.lru_cache(maxsize=None)
 def default_queue_lut(steps: int = DEFAULT_STEPS, seed: int = 0,
-                      reps: int = DEFAULT_REPS) -> QueueLUT:
-    """The shared default-grid surface; built once per (steps, seed, reps).
+                      reps: int = DEFAULT_REPS,
+                      engine: str = DEFAULT_ENGINE) -> QueueLUT:
+    """The shared default-grid surface; built once per (steps, seed,
+    reps, engine).
 
     This is what ``cpu_model.solve(..., queue_model="memsim")`` uses when
     no explicit LUT is passed.
     """
-    return build_queue_lut(steps=steps, seed=seed, reps=reps)
+    return build_queue_lut(steps=steps, seed=seed, reps=reps,
+                           engine=engine)

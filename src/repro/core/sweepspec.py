@@ -179,7 +179,11 @@ class SweepSpec:
 
     def solve(self, **kwargs):
         """Solve the grid: ``coaxial.SweepResult`` for cpu-targeted specs,
-        ``coaxial.DistributionSweepResult`` for memsim-targeted ones."""
+        ``coaxial.DistributionSweepResult`` for memsim-targeted ones.
+        Keyword arguments pass through to the solver -- memsim-targeted
+        specs accept ``engine="timestep"|"event"`` (and ``steps``,
+        ``seed``, ``reps``, ...) exactly like
+        ``coaxial.distribution_sweep``."""
         from repro.core import coaxial  # runtime import: coaxial imports us
         if self.target == "memsim":
             return coaxial.distribution_sweep(self, **kwargs)
@@ -343,8 +347,9 @@ def distribution_spec(**axes) -> SweepSpec:
     Every keyword names a :class:`memsim.ChannelConfig` field (``rho``,
     ``kappa``, ``cxl_lat_ns``, ``stall_ns``, ...); axis order is
     declaration order and scalars are promoted to length-1 axes.  The
-    resulting spec lowers to ONE jitted ``lax.scan`` over the flattened
-    cell batch (:func:`build_flat_memsim`), and
+    resulting spec lowers to ONE jitted simulation over the flattened
+    cell batch (:func:`build_flat_memsim`) -- under either memsim engine
+    (``spec.solve(engine="event")``) -- and
     ``coaxial.distribution_sweep`` wraps the result in a named-axis
     ``DistributionSweepResult``.
     """
@@ -379,9 +384,9 @@ def build_flat_memsim(spec: SweepSpec,
     Returns ``cha`` (a :class:`ChannelArrays` of the base channel's values
     broadcast to ``(N,)``) and ``overrides`` (NaN = "keep the base
     channel's value", one ``(N,)`` array per bound axis) -- the overrides
-    are applied branch-free in-trace by ``memsim.simulate_cells``, so the
-    jit cache keys on the flattened cell count alone, exactly like the
-    cpu target.
+    are applied branch-free in-trace by ``memsim.simulate_cells`` (under
+    whichever engine runs the sweep), so each engine's jit cache keys on
+    the flattened cell count alone, exactly like the cpu target.
     """
     base = base if base is not None else ChannelConfig(rho=0.5)
     bad = [ax.name for ax in spec.axes if ax.kind != KIND_CHANNEL_FIELD]

@@ -92,20 +92,24 @@ class TestCrossValidation:
 
 class TestStructure:
     def test_three_axis_grid_is_one_trace(self):
-        # A (cell count, steps) pair no other test uses forces a fresh
-        # trace; the whole 3-axis grid must bump the counter by one.
+        # A flattened cell count no other test uses forces a fresh trace
+        # of the (chunked) timestep kernel; the whole 3-axis grid must
+        # bump the counter by one.  The chunk length is a module
+        # constant, so the cache keys on the cell count alone -- not
+        # even the step budget retraces.
         spec = distribution_spec(rho=(0.2, 0.4, 0.6),
                                  kappa=(1.0, 1.7),
                                  cxl_lat_ns=(0.0, 30.0))
-        before = memsim.sim_trace_count()
+        before = memsim.sim_trace_count("timestep")
         sw = coaxial.distribution_sweep(spec, steps=30_000)
         assert sw.shape == (3, 2, 2)
-        assert memsim.sim_trace_count() == before + 1
-        # Same flattened size + steps, different axis values: cache hit.
+        assert memsim.sim_trace_count("timestep") == before + 1
+        # Same flattened size, different axis values AND different step
+        # budget: cache hit.
         coaxial.distribution_sweep(
             distribution_spec(rho=(0.1, 0.3, 0.7), kappa=(1.2, 2.4),
-                              stall_ns=(30.0, 45.0)), steps=30_000)
-        assert memsim.sim_trace_count() == before + 1
+                              stall_ns=(30.0, 45.0)), steps=46_000)
+        assert memsim.sim_trace_count("timestep") == before + 1
 
     def test_batched_sweep_equals_legacy_simulate_bitwise(self):
         spec = distribution_spec(rho=(0.3, 0.6), cxl_lat_ns=(0.0, 30.0))
