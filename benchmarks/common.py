@@ -9,6 +9,32 @@ import time
 
 import jax
 
+#: When a list, :func:`emit` also records ``(name, us, derived)`` rows --
+#: ``run.py`` points this at a per-section buffer to build the versioned
+#: ``BENCH_<rev>.json`` trajectory point.
+ROWS = None
+
+
+def enable_compile_cache() -> str | None:
+    """Opt-in persistent XLA compile cache (the flywheel's warm start).
+
+    ``REPRO_COMPILE_CACHE`` names a directory; when set, every XLA
+    executable this process compiles is written there and later runs with
+    the same jaxlib reload it instead of re-tracing through LLVM -- the
+    DES chunk kernels dominate benchmark startup, so CI caches the
+    directory across runs keyed on the jax version.  Unset (the default)
+    leaves compilation exactly as before.  The thresholds are zeroed so
+    even the small second-stage kernels are cached.
+    """
+    path = os.environ.get("REPRO_COMPILE_CACHE", "").strip()
+    if not path:
+        return None
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return path
+
 
 def _engines() -> tuple:
     """The memsim engines (lazy import: a third engine added to memsim
@@ -67,3 +93,5 @@ def time_call(fn, *args, warmup=1, iters=3):
 
 def emit(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    if ROWS is not None:
+        ROWS.append((str(name), float(us), str(derived)))

@@ -7,9 +7,9 @@ rate), same replica counts -- and cross-checks that the results agree, so
 the speedup rows are apples to apples:
 
   * ``memsim_speed.lut.*`` -- the default QueueLUT build grid
-    (14 x 6 x 6 cells x ``DEFAULT_REPS`` replicas, ``DEFAULT_STEPS`` ns
-    per cell), plus the wait-table agreement between the two builds at
-    the nodes with meaningful queueing (>10 ns mean wait);
+    (14 x 6 x 6 x 4 cells x ``DEFAULT_REPS`` replicas, ``DEFAULT_STEPS``
+    ns per cell), plus the wait-table agreement between the two builds
+    at the nodes with meaningful queueing (>10 ns mean wait);
   * ``memsim_speed.fig2a.*`` -- the ``validate_calibration`` anchor run
     (8 rho anchors x 48 replicas), plus each engine's closed-form anchor
     errors at the timed budget (the pass/fail gates are enforced at full
@@ -26,6 +26,14 @@ narrow batches and sample-starved low-rho cells and smallest for very
 wide batches where the timestep amortizes its per-step cost across
 lanes.  All three shapes are reported so the trade is visible in CI.
 
+On top of the engine-vs-engine rows, ``memsim_speed.shard.*`` times the
+SAME three shapes sharded over every local device against the 1-device
+path (``repro.core.shardsim``; force more host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  The sharded
+results must be BIT-IDENTICAL to the unsharded ones -- the agreement row
+raises on any mismatch, so a sharding regression fails the whole
+benchmark run, not just a gate deep in a report.
+
 ``REPRO_DES_STEPS`` caps every budget (both engines, coherently);
 timings are min-of-``REPRO_SPEED_ITERS`` (default 2) to suppress
 noisy-neighbor variance.
@@ -37,7 +45,7 @@ import time
 import numpy as np
 
 from benchmarks.common import des_budget, emit
-from repro.core import coaxial, memsim, queuelut
+from repro.core import coaxial, memsim, queuelut, shardsim
 
 
 def _best_of(fn, iters, warmed=False):
@@ -65,7 +73,8 @@ def main():
             lambda eng=eng: queuelut.build_queue_lut(
                 engine=eng, steps=lut_steps, seed=1), iters, warmed=True)
     cells = (len(queuelut.DEFAULT_RHO_GRID) * len(queuelut.DEFAULT_KAPPA_GRID)
-             * len(queuelut.DEFAULT_OUTSTANDING_GRID))
+             * len(queuelut.DEFAULT_OUTSTANDING_GRID)
+             * len(queuelut.DEFAULT_ETA_GRID))
     for eng in memsim.ENGINES:
         emit(f"memsim_speed.lut.{eng}_s", times[eng] * 1e6,
              f"{times[eng]:.2f}")
@@ -109,6 +118,49 @@ def main():
              f"{times[eng]:.2f}")
     emit("memsim_speed.curve.speedup", 0.0,
          f"{times['timestep'] / times['event']:.2f}")
+
+    shard_section(iters, lut_steps, val_steps)
+
+
+def shard_section(iters, lut_steps, val_steps):
+    """Sharded vs unsharded wall-clock on the three canonical shapes,
+    with a raising bit-equality gate on every result."""
+    ndev = shardsim.resolve_devices("auto")
+    eng = queuelut.DEFAULT_ENGINE
+    shapes = {
+        "lut": lambda d: queuelut.build_queue_lut(
+            engine=eng, steps=lut_steps, seed=2, devices=d),
+        "fig2a": lambda d: coaxial.validate_calibration(
+            engine=eng, steps=val_steps, seed=2, devices=d),
+        "curve": lambda d: memsim.load_latency_curve(
+            engine=eng, steps=val_steps, reps=1, seed=2, devices=d),
+    }
+    emit("memsim_speed.shard.devices", 0.0, ndev)
+    results = {}
+    for label, fn in shapes.items():
+        t1, r1 = _best_of(lambda: fn(1), iters)
+        tn, rn = _best_of(lambda: fn(ndev), iters)
+        results[label] = (r1, rn)
+        emit(f"memsim_speed.shard.{label}.base_s", t1 * 1e6, f"{t1:.2f}")
+        emit(f"memsim_speed.shard.{label}.sharded_s", tn * 1e6,
+             f"{tn:.2f}")
+        emit(f"memsim_speed.shard.{label}.speedup", 0.0,
+             f"{t1 / tn:.2f}")
+    # The hard gate: sharded == unsharded, bitwise.  assert_array_equal
+    # raises, run.py records the section as failed, CI goes red.
+    l1, ln = results["lut"]
+    for t1, tn in zip((l1.wait_ns, l1.p90_wait_ns, l1.sigma_ns),
+                      (ln.wait_ns, ln.p90_wait_ns, ln.sigma_ns)):
+        np.testing.assert_array_equal(np.asarray(t1), np.asarray(tn))
+    v1, vn = results["fig2a"]
+    for a1, an in zip(v1["anchors"], vn["anchors"]):
+        if a1["des_mean_ns"] != an["des_mean_ns"]:
+            raise AssertionError(
+                f"sharded fig2a anchor drifted: {a1} != {an}")
+    c1, cn = results["curve"]
+    np.testing.assert_array_equal(c1["mean_ns"], cn["mean_ns"])
+    np.testing.assert_array_equal(c1["p90_ns"], cn["p90_ns"])
+    emit("memsim_speed.shard.agree", 0.0, 1)
 
 
 if __name__ == "__main__":

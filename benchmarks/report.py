@@ -145,12 +145,93 @@ def pareto_table() -> str:
     return "\n".join(lines)
 
 
+def _load_bench_points(bench_dir=None) -> list:
+    """All ``BENCH_*.json`` trajectory points, oldest first (mtime)."""
+    import glob
+    import os
+    from benchmarks.run import BENCH_DIR
+    d = bench_dir or BENCH_DIR
+    paths = sorted(glob.glob(os.path.join(d, "BENCH_*.json")),
+                   key=os.path.getmtime)
+    pts = []
+    for p in paths:
+        with open(p) as f:
+            pts.append((os.path.basename(p), json.load(f)))
+    return pts
+
+
+def bench_diff_table(bench_dir=None) -> str:
+    """Diff the newest ``BENCH_<rev>.json`` against the prior point.
+
+    Two tables: per-section wall-clock / row / trace-count drift, and
+    the emitted rows whose numeric ``derived`` moved by more than 5%
+    (speedups sliding, gates loosening).  With a single point the tables
+    degrade to a plain snapshot -- the first run of the flywheel.
+    """
+    pts = _load_bench_points(bench_dir)
+    if not pts:
+        return "(no BENCH_*.json points yet -- run `python -m " \
+               "benchmarks.run` to start the trajectory)"
+    name_cur, cur = pts[-1]
+    name_prev, prev = pts[-2] if len(pts) > 1 else (None, None)
+    lines = [f"Current: `{name_cur}` (rev {cur['rev']}, "
+             f"{cur['env']['devices']} device(s), "
+             f"{cur['totals']['seconds']:.1f}s, "
+             f"{cur['totals']['failures']} failure(s))"]
+    if prev is not None:
+        lines.append(f"Prior:   `{name_prev}` (rev {prev['rev']}, "
+                     f"{prev['env']['devices']} device(s), "
+                     f"{prev['totals']['seconds']:.1f}s)")
+    lines += ["", "| section | prev s | cur s | dt% | rows | traces |",
+              "|---|---|---|---|---|---|"]
+    prev_secs = (prev or {}).get("sections", {})
+    for name, s in cur["sections"].items():
+        p = prev_secs.get(name)
+        tr = "+".join(str(v) for v in s.get("traces", {}).values())
+        if p is None or not p["seconds"]:
+            lines.append(f"| {name} | | {s['seconds']:.2f} | | "
+                         f"{s['rows']} | {tr} |")
+        else:
+            d = 100.0 * (s["seconds"] / p["seconds"] - 1.0)
+            lines.append(f"| {name} | {p['seconds']:.2f} | "
+                         f"{s['seconds']:.2f} | {d:+.0f}% | "
+                         f"{s['rows']} | {tr} |")
+    if prev is None:
+        return "\n".join(lines)
+
+    def numeric_rows(pt):
+        out = {}
+        for name, _us, derived in pt["rows"]:
+            try:
+                out[name] = float(derived)
+            except ValueError:
+                pass
+        return out
+
+    cu, pr = numeric_rows(cur), numeric_rows(prev)
+    moved = []
+    for name in sorted(set(cu) & set(pr)):
+        a, b = pr[name], cu[name]
+        if a == b:
+            continue
+        rel = abs(b - a) / max(abs(a), 1e-12)
+        if rel > 0.05:
+            moved.append((rel, name, a, b))
+    if moved:
+        lines += ["", "| row (moved >5%) | prev | cur |", "|---|---|---|"]
+        for rel, name, a, b in sorted(moved, reverse=True)[:20]:
+            lines.append(f"| {name} | {a:g} | {b:g} |")
+    else:
+        lines += ["", "(no numeric row moved by more than 5%)"]
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "coaxial",
-                             "pareto", "drift"])
+                             "pareto", "drift", "bench"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
     args = ap.parse_args()
@@ -176,6 +257,10 @@ def main():
     if args.section in ("all", "drift"):
         print("### Closed form vs mechanism (headline drift)\n")
         print(drift_table())
+        print()
+    if args.section in ("all", "bench"):
+        print("### Benchmark trajectory (BENCH_<rev>.json diff)\n")
+        print(bench_diff_table())
 
 
 if __name__ == "__main__":

@@ -3,3 +3,13 @@ import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+# Give the test session multiple virtual host devices so the sharded DES
+# path (repro.core.shardsim) is exercised for real, not just at ndev=1.
+# Must run before jax initialises its backends; conftest import precedes
+# every test module, so guard only against an already-imported jax.
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = \
+            (_flags + " --xla_force_host_platform_device_count=4").strip()

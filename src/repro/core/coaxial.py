@@ -791,7 +791,7 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
                        base: ChannelConfig | None = None,
                        steps: int = 200_000, seed: int = 0,
                        warmup: int | None = None, reps: int = 1,
-                       engine: str = "timestep",
+                       engine: str = "timestep", devices=None,
                        **axes) -> DistributionSweepResult:
     """Run the DES over a named-axis grid of channel parameters.
 
@@ -807,7 +807,10 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
     per-request Lindley engine -- several times faster at the same
     ``steps`` budget, most on narrow batches and low-rho cells; see
     ``benchmarks/memsim_speed.py``, :mod:`repro.core.memsim` and
-    :func:`crosscheck_engines`).
+    :func:`crosscheck_engines`).  ``devices`` shards the flattened cell
+    batch over that many host devices (``None`` consults
+    ``$REPRO_DES_DEVICES``; ``"auto"`` = all local devices) --
+    bit-identical results at any device count, wall-clock only.
 
     Example (doctest-sized step budget; real sweeps use the 200k
     default)::
@@ -834,7 +837,7 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
     warmup = memsim.default_warmup(steps) if warmup is None else int(warmup)
     stats = memsim.simulate_cells(
         flat["cha"], overrides=flat["overrides"], steps=steps, seed=seed,
-        warmup=warmup, reps=reps, engine=engine)
+        warmup=warmup, reps=reps, engine=engine, devices=devices)
     return DistributionSweepResult(
         axes=spec.axes, stats=stats.reshape(*spec.shape),
         base=base if base is not None else ChannelConfig(rho=0.5),
@@ -858,6 +861,7 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                          cxl_lat_ns: float = 0.0, steps: int = 200_000,
                          seed: int = 0, warmup: int | None = None,
                          reps: int = 48, engine: str = "timestep",
+                         devices=None,
                          mean_tol: float = CALIBRATION_MEAN_TOL,
                          p90_tol: float = CALIBRATION_P90_TOL,
                          stdev_tol: float = CALIBRATION_STDEV_TOL) -> dict:
@@ -898,7 +902,7 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                          cxl_lat_ns=float(cxl_lat_ns))
     sw = distribution_sweep(distribution_spec(rho=rhos), base=base,
                             steps=steps, seed=seed, warmup=warmup,
-                            reps=reps, engine=engine)
+                            reps=reps, engine=engine, devices=devices)
     anchors = []
     for r in rhos:
         des = sw.sel(rho=r)
@@ -933,6 +937,12 @@ def validate_calibration(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
 #: the relative mean / p90 deviation at every anchor.
 ENGINE_MEAN_TOL = 0.10
 ENGINE_P90_TOL = 0.15
+#: Noise allowance on top of the relative gates: an anchor whose engine
+#: delta lies within ``k`` batched-means standard errors of zero passes
+#: even if the relative deviation exceeds the tolerance -- at low rho the
+#: waits are fractions of a bin and a few-percent absolute delta is pure
+#: replica noise, not a law drift.
+ENGINE_SE_K = 3.0
 
 
 def crosscheck_engines(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
@@ -940,7 +950,8 @@ def crosscheck_engines(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                        seed: int = 0, warmup: int | None = None,
                        reps: int = 32,
                        mean_tol: float = ENGINE_MEAN_TOL,
-                       p90_tol: float = ENGINE_P90_TOL) -> dict:
+                       p90_tol: float = ENGINE_P90_TOL,
+                       se_k: float = ENGINE_SE_K, devices=None) -> dict:
     """Statistical cross-check of the two memsim engines at the closed-form
     rho anchors.
 
@@ -948,36 +959,81 @@ def crosscheck_engines(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
     budget (the event engine converts it to its request budget) and
     gates the relative mean (<= 10%) and p90 (<= 15%) deviation per
     anchor -- the mechanism-level counterpart of
-    :func:`validate_calibration`'s DES-vs-closed-form gates.  Returns
-    one row per anchor plus ``max_abs_mean_err`` / ``max_abs_p90_err``
-    and an ``ok`` flag.
+    :func:`validate_calibration`'s DES-vs-closed-form gates.
+
+    The gate is standard-error-aware: the ``reps`` independent replicas
+    double as batches for a batched-means SE estimate of each engine's
+    mean/p90, and an anchor passes if its relative deviation is within
+    tolerance OR its delta is within ``se_k`` combined standard errors of
+    zero (``|z| <= se_k``) -- so a tight budget fails only on real law
+    drift, never on replica noise (with ``reps < 2`` the SE is undefined
+    and the pure relative gate applies).  Returns one row per anchor
+    (values, relative errors, per-engine SEs and the z-scores) plus
+    ``max_abs_mean_err`` / ``max_abs_p90_err`` and an ``ok`` flag.
     """
     rhos = tuple(float(r) for r in rhos)
     base = ChannelConfig(rho=0.5, kappa=float(kappa),
                          cxl_lat_ns=float(cxl_lat_ns))
-    sweeps = {
-        eng: distribution_sweep(distribution_spec(rho=rhos), base=base,
-                                steps=steps, seed=seed, warmup=warmup,
-                                reps=reps, engine=eng)
-        for eng in memsim.ENGINES}
+    spec = distribution_spec(rho=rhos)
+    flat = build_flat_memsim(spec, base=base)
+    warm = memsim.default_warmup(steps) if warmup is None else int(warmup)
+    sweeps, per_rep = {}, {}
+    for eng in memsim.ENGINES:
+        # ONE simulation per engine: per-replica stats for the SE, merged
+        # histograms (bit-identical to a keep_reps=False run) for the
+        # headline numbers and the returned sweeps.
+        per_rep[eng] = memsim.simulate_cells(
+            flat["cha"], overrides=flat["overrides"], steps=int(steps),
+            seed=seed, warmup=warm, reps=reps, engine=eng,
+            devices=devices, keep_reps=True)
+        merged = memsim.merge_reps(per_rep[eng])
+        sweeps[eng] = DistributionSweepResult(
+            axes=spec.axes, stats=merged.reshape(*spec.shape), base=base,
+            steps=int(steps), warmup=warm, seed=seed, reps=reps,
+            engine=eng)
+
+    def se(field, eng, i):
+        """Batched-means standard error of the merged statistic: the
+        replicas are iid equal-weight batches, so the spread of their
+        per-replica statistics estimates it directly."""
+        batch = np.asarray(getattr(per_rep[eng], field))[:, i]
+        if batch.shape[0] < 2:
+            return np.nan
+        return float(np.std(batch, ddof=1) / np.sqrt(batch.shape[0]))
+
     anchors = []
-    for r in rhos:
+    for i, r in enumerate(rhos):
         ts = sweeps["timestep"].sel(rho=r)
         ev = sweeps["event"].sel(rho=r)
-        anchors.append(dict(
-            rho=r,
-            timestep_mean_ns=float(ts.mean_ns),
-            event_mean_ns=float(ev.mean_ns),
-            mean_err=float(ev.mean_ns) / float(ts.mean_ns) - 1.0,
-            timestep_p90_ns=float(ts.p90_ns),
-            event_p90_ns=float(ev.p90_ns),
-            p90_err=float(ev.p90_ns) / float(ts.p90_ns) - 1.0))
+        row = dict(rho=r,
+                   timestep_mean_ns=float(ts.mean_ns),
+                   event_mean_ns=float(ev.mean_ns),
+                   mean_err=float(ev.mean_ns) / float(ts.mean_ns) - 1.0,
+                   timestep_p90_ns=float(ts.p90_ns),
+                   event_p90_ns=float(ev.p90_ns),
+                   p90_err=float(ev.p90_ns) / float(ts.p90_ns) - 1.0)
+        for stat, field in (("mean", "mean_ns"), ("p90", "p90_ns")):
+            se_d = np.sqrt(se(field, "timestep", i) ** 2 +
+                           se(field, "event", i) ** 2)
+            delta = row[f"event_{field}"] - row[f"timestep_{field}"]
+            # A zero/NaN SE degenerates cleanly: zero delta passes with
+            # z = 0, any other delta falls back to the relative gate.
+            z = delta / se_d if se_d > 0 else (
+                0.0 if delta == 0.0 else np.copysign(np.inf, delta))
+            row[f"{stat}_se_ns"] = float(se_d)
+            row[f"{stat}_z"] = float(z)
+            # NaN SE (reps < 2) makes |z| <= k False: pure relative gate.
+            row[f"{stat}_ok"] = bool(abs(row[f"{stat}_err"]) <= (
+                mean_tol if stat == "mean" else p90_tol)
+                or abs(z) <= se_k)
+        row["ok"] = row["mean_ok"] and row["p90_ok"]
+        anchors.append(row)
     max_mean = max(abs(a["mean_err"]) for a in anchors)
     max_p90 = max(abs(a["p90_err"]) for a in anchors)
     return dict(anchors=anchors, max_abs_mean_err=max_mean,
                 max_abs_p90_err=max_p90, mean_tol=mean_tol,
-                p90_tol=p90_tol, sweeps=sweeps,
-                ok=bool(max_mean <= mean_tol and max_p90 <= p90_tol))
+                p90_tol=p90_tol, se_k=se_k, sweeps=sweeps,
+                ok=all(a["ok"] for a in anchors))
 
 
 # ---------------------------------------------------------------------------

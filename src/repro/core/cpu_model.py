@@ -249,7 +249,9 @@ def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
     ``lut`` selects the queue-wait backend at trace time: ``None`` is the
     calibrated closed form; a :class:`~repro.core.queuelut.QueueLUT`
     replaces the DRAM-side wait with the DES-measured mean-wait table
-    (``eta`` stays a multiplicative balance factor on it) and the sigma
+    (``eta`` is a real grid axis of the 4-D surface -- the DES simulates
+    the workload's DRAM sensitivity as a scaled blocking-episode
+    probability, so no post-hoc multiplier remains) and the sigma
     heuristic with the DES-measured latency-stdev table.  The CXL *link*
     queue keeps its closed form either way -- the LUT tabulates the DRAM
     channel, not the serial link.
@@ -263,8 +265,9 @@ def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
             rho, kappa=wl.kappa, eta=wl.eta,
             outstanding_per_channel=outstanding, channel_bw_gbps=ch_bw)
     else:
-        w_mem, _, sigma_mem = lut.lookup(rho, wl.kappa, outstanding)
-        w_dram = wl.eta * w_mem
+        w_mem, _, sigma_mem = lut.lookup(rho, wl.kappa, outstanding,
+                                         wl.eta)
+        w_dram = w_mem
     link_rd_bw = jnp.maximum(sysa.links * sysa.link_rd_gbps, 1e-9)
     rho_rx = read_gbps / link_rd_bw
     svc_rx = hw.CACHE_LINE_B / jnp.maximum(sysa.link_rd_gbps, 1e-9)

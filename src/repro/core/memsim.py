@@ -11,12 +11,13 @@ load-latency curve and Fig 6b's CDF comparison.
 TWO ENGINES share one mechanism (same arrival, service and admission laws):
 
   * ``engine="timestep"`` (the reference): a 1-ns time-stepped scan.  Per
-    nanosecond it draws one fused threefry uniform block, advances the
-    two-state MMPP, flips a Bernoulli arrival coin, and drains the backlog
-    by 1 ns.  It is frozen as the bit-exact reference -- every change to
-    it must reproduce the historical histograms bit for bit -- which is
-    also why it stays expensive: the per-step threefry draw inside the
-    scan is part of its identity.
+    nanosecond it advances the two-state MMPP, flips a Bernoulli arrival
+    coin, and drains the backlog by 1 ns.  Each emission chunk's five
+    uniforms per step come from ONE threefry stream per lane, keyed by
+    the logical lane index (``fold_in(chunk_key, lane)``) and generated
+    up front outside the scan -- the lane-keyed stream contract (below)
+    that makes every lane's draws independent of batch width, padding
+    and device count.
   * ``engine="event"`` (the fast engine): one scan iteration per
     **request** -- the Lindley recursion ``W_{k+1} = max(W_k + S_k - A_k,
     0)`` over per-request inter-arrival gaps and service draws, roughly
@@ -82,20 +83,37 @@ rate of the rho = 0.5 reference channel, the repo's calibration anchor),
 so one knob -- and one ``REPRO_DES_STEPS`` cap -- throttles both engines
 coherently.
 
-All randomness is threefry-derived from an explicit seed: runs are exactly
-reproducible per engine (the two engines draw different streams).
+All randomness is threefry-derived from an explicit seed, with one stream
+per LANE keyed by the logical lane index: ``fold_in(chunk_key, lane)``
+where the chunk keys are split from the seed.  Runs are exactly
+reproducible per engine (the two engines draw different streams), and --
+because no draw ever depends on the batch width or the device layout --
+a lane simulates identically whether it runs alone, inside a wider batch
+(at equal chunk schedule), on one device or on many.
+
+DEVICE PARALLELISM: lanes are independent chains, so both engines
+optionally shard the lane axis across host devices via
+:mod:`repro.core.shardsim` (``devices=`` on every entry point, or the
+``REPRO_DES_DEVICES`` env knob; ``XLA_FLAGS=
+--xla_force_host_platform_device_count=N`` splits one CPU into N
+devices).  The batch is NaN-padded to a multiple of the device count and
+the SAME chunk kernels run per shard; the lane-keyed streams plus
+global-lane histogram indices make the sharded result bit-identical to
+the unsharded one -- ``devices`` changes wall-clock, never a single
+count.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hw
+from repro.core import hw, shardsim
 
 #: Histogram binning for latency distributions.
 BIN_NS = 4.0
@@ -154,14 +172,25 @@ EVENTS_PER_NS = 0.35667
 
 #: Steps per emission chunk of the timestep engine: the scan emits
 #: ``(latency, mask)`` per step (no in-loop histogram scatter); chunking
-#: bounds the emission buffer at ``_TS_CHUNK * cells`` floats.
-_TS_CHUNK = 8192
+#: bounds both the emission buffer and the chunk's precomputed per-lane
+#: uniform block (``chunk x 5 x lanes`` f32) -- adaptive like the event
+#: engine's, and derived from the UNPADDED batch width so the chunk
+#: schedule (part of the stream contract) never depends on device count.
+_TS_CHUNK_ELEMS = 24_000_000
+_TS_CHUNK_MIN, _TS_CHUNK_MAX = 1024, 8192
 #: Requests per chunk of the event engine: adaptive so the chunk's
 #: working set (~a dozen ``chunk x cells`` f32 arrays) stays cache-sized
 #: at any batch width -- wide LUT-build batches take smaller chunks,
 #: narrow test batches take larger ones.
 _EV_CHUNK_ELEMS = 5_000_000
 _EV_CHUNK_MIN, _EV_CHUNK_MAX = 1024, 16384
+
+
+def _ts_chunk_len(n: int) -> int:
+    c = _TS_CHUNK_MIN
+    while c < _TS_CHUNK_MAX and c * 2 * 5 * n <= _TS_CHUNK_ELEMS:
+        c *= 2
+    return c
 
 
 def _event_chunk_len(n: int) -> int:
@@ -193,6 +222,16 @@ class ChannelConfig:
     #: are blocked while the backlog holds more than
     #: ``outstanding * t_xfer_ns`` of queued work.  ``inf`` = open loop.
     outstanding: float = float("inf")
+    #: Queue-exposure factor (``cpu_model``'s per-workload MLP/overlap
+    #: knob): scales the per-request probability of a controller blocking
+    #: episode, ``p_eff = eta * stall_prob``, while the small-service
+    #: level re-absorbs the difference so E[S] stays exactly ``t_xfer``
+    #: (rho keeps its meaning).  Since the M/G/1 wait is dominated by the
+    #: blocking tail's E[S^2], the mean wait scales ~linearly in eta --
+    #: the mechanistic counterpart of the old ``eta * W`` multiplier,
+    #: but with the variance and quantiles simulated, not scaled.
+    #: ``1.0`` (the default) is bit-identical to the pre-eta simulator.
+    eta: float = 1.0
     t_xfer_ns: float = hw.CACHE_LINE_B / hw.DDR5_CH_BW_GBPS
     service_ns: float = hw.DRAM_SERVICE_NS - 2.0   # pipelined access part
     cxl_lat_ns: float = 0.0     # CXL interface premium (0 => direct DDR)
@@ -219,6 +258,7 @@ class ChannelArrays(NamedTuple):
     rho: jnp.ndarray
     kappa: jnp.ndarray
     outstanding: jnp.ndarray
+    eta: jnp.ndarray
     t_xfer_ns: jnp.ndarray
     service_ns: jnp.ndarray
     cxl_lat_ns: jnp.ndarray
@@ -252,10 +292,11 @@ def _apply_channel_overrides(cha: ChannelArrays, ov) -> ChannelArrays:
 
 
 #: Number of times each engine's jitted chunk kernel has been TRACED (not
-#: called).  A trace only happens on a new flattened cell count (the chunk
-#: length is a module constant, and the event engine's sojourn count
-#: derives from the request budget), so a whole named-axis distribution
-#: grid bumps its engine's counter by exactly one; tests pin that.
+#: called).  A trace only happens on a new (flattened cell count, device
+#: count) pair -- chunk lengths derive from the unpadded batch width and
+#: the event engine's sojourn count from the request budget, never from
+#: axis values -- so a whole named-axis distribution grid bumps its
+#: engine's counter by exactly one, sharded or not; tests pin that.
 _TRACE_COUNT = {"timestep": 0, "event": 0}
 
 
@@ -313,8 +354,13 @@ def _channel_terms(c: ChannelArrays) -> dict:
     q_b = (sn / xb) ** a1                    # survival at the break
     stall_mean = (sn + sn * _pareto_seg(sn / xb, a1) +
                   q_b * xb * _pareto_seg(xb / cap, a2))
-    s_small = ((c.t_xfer_ns - c.stall_prob * stall_mean) /
-               (1.0 - c.stall_prob))
+    # Effective blocking probability: ``eta`` scales how often a request
+    # triggers a blocking episode (eta = 1 reproduces stall_prob exactly,
+    # bit for bit -- x * 1.0 is exact in f32).  s_small re-absorbs the
+    # blocking work either way, so E[S] stays t_xfer at every eta.
+    p_stall = jnp.clip(c.stall_prob * c.eta, 0.0, 0.999)
+    s_small = ((c.t_xfer_ns - p_stall * stall_mean) /
+               (1.0 - p_stall))
     s_small = jnp.maximum(s_small, MIN_SERVICE_NS)
     # Lattice candidate intensities for the event engine: a Bernoulli(p)
     # per-ns arrival process equals a Poisson stream of intensity
@@ -325,104 +371,215 @@ def _channel_terms(c: ChannelArrays) -> dict:
     lam_avg = -jnp.log1p(-jnp.minimum(rate_avg, 0.98))
     return dict(rate_avg=rate_avg, rate_hi=rate_hi, rate_lo=rate_lo,
                 p_leave=p_leave, p_enter=p_enter, q_b=q_b,
-                s_small=s_small, lam_hi=lam_hi, lam_lo=lam_lo,
-                lam_avg=lam_avg)
+                p_stall=p_stall, s_small=s_small, lam_hi=lam_hi,
+                lam_lo=lam_lo, lam_avg=lam_avg)
 
 
 # ---------------------------------------------------------------------------
-# Timestep engine: the bit-exact 1-ns reference.
+# Two-stage kernels: width-pinned randomness, shardable recursion.
+#
+# Bit-identity across device counts cannot survive recompiling
+# transcendental math at different widths: XLA fuses ``log``/``exp``/
+# ``pow`` into whatever surrounds them, and two fusions may round a
+# result 1 ulp apart -- enough to flip a ``ceil`` or a bin boundary.
+# So each engine is split in two:
+#
+#   * STAGE A (draws + transcendentals + MMPP/service law): ALWAYS
+#     compiled at the UNPADDED batch width, whatever ``devices`` is.
+#     Same executable + same inputs = bitwise-identical outputs -- the
+#     only cross-run invariant XLA actually guarantees.
+#   * STAGE B (the sequential recursion: Lindley / backlog scan, plus
+#     binning): compiled per (device count, padded width) and run under
+#     ``shard_map``.  Its ops are restricted to correctly-rounded
+#     elementwise arithmetic (add/sub/mul/div/min/max/where/compare) and
+#     integer work, each deterministic at ANY width; the one ``a*b + c``
+#     pattern multiplies by an exact 0/1 indicator, so FMA contraction
+#     cannot change it.  That restriction -- no transcendentals, no
+#     reductions -- is what makes the per-shard recompile exact, and it
+#     is also why the split helps wall-clock: the embarrassingly
+#     parallel stage A runs once, and only the sequential scan (the part
+#     that cannot vectorize across time) is sharded across devices.
 # ---------------------------------------------------------------------------
 
-def _ts_chunk_core(cha: ChannelArrays, ov, state, keys, record):
-    """One emission chunk of the time-stepped reference engine.
+def _lane_uniforms(key, lane_idx, shape, **kw):
+    """Per-lane uniforms from lane-keyed threefry streams.
 
-    The scan body is the historical per-nanosecond step, bit for bit --
-    same per-step threefry keys, same fused ``(5, n)`` uniform draw, same
-    arithmetic -- except that instead of scatter-updating a histogram
-    carried through the scan it EMITS ``(latency, arrive * record)`` and
-    the histogram indices are produced post-scan, vectorized over the
-    whole chunk (the host accumulates them with one ``bincount``).
-    Dropping the ``(n, N_BINS)`` carry is the whole micro-opt: the counts
-    are small integers, exact in either accumulation order, so results
-    stay bit-identical while the scan stops copying a histogram per
-    nanosecond.
+    One stream per lane, keyed by the GLOBAL lane index
+    (``fold_in(chunk_key, lane)``): lane ``i`` draws the same values at
+    any batch width or device layout -- the stream half of the
+    determinism contract (stage A's fixed-width compile is the other
+    half).  Returns ``shape + (n,)``.
     """
-    _TRACE_COUNT["timestep"] += 1  # side effect runs at trace time only
+    lane_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, lane_idx)
+    u = jax.vmap(lambda k: jax.random.uniform(k, shape, **kw))(lane_keys)
+    return jnp.moveaxis(u, 0, -1)
+
+
+def _flat_bins(lat, rec, lane_idx, n_total: int):
+    """Post-scan vectorized histogram indices for one chunk.
+
+    ``lat``/``rec`` are ``(C, n)``; returns flattened ``lane * N_BINS +
+    bin`` int32 indices with unrecorded entries parked in one overflow
+    slot (``n_total * N_BINS``).  The lane offsets use the GLOBAL lane
+    ids (``lane_idx``) and the overflow slot the GLOBAL padded width, so
+    per-shard emissions live in one shared index space and the host's
+    single ``bincount`` merges shards exactly; it drops the overflow
+    slot, so no boolean compaction is needed on either side.
+    """
+    bins = jnp.clip((lat * (1.0 / BIN_NS)).astype(jnp.int32), 0, N_BINS - 1)
+    off = (lane_idx.astype(jnp.int32) * N_BINS)[None, :]
+    return jnp.where(rec, bins + off, n_total * N_BINS)
+
+
+def _pad_cols(x, pad: int, value: float):
+    """Append ``pad`` constant lanes to the trailing axis -- pure data
+    movement (bit-exact under any compile), done INSIDE the stage B jit
+    so stage A shapes never see the device count."""
+    if pad == 0:
+        return x
+    shape = x.shape[:-1] + (pad,)
+    return jnp.concatenate([x, jnp.full(shape, value, x.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Timestep engine: the 1-ns reference.
+# ---------------------------------------------------------------------------
+
+def _ts_draws(cha: ChannelArrays, ov, lane_idx, key, chunk: int):
+    """Stage A of the timestep engine: one chunk of per-lane randomness.
+
+    Draws the five per-step uniforms per lane (switch / arrival / jitter
+    / blocking-or-not / blocking size) from the lane-keyed streams and
+    finishes every law that needs transcendental math: the jitter offset
+    and the full two-slope service draw.  Returns ``(chunk, n)`` arrays
+    ``(switch_u, arrive_u, jitter, svc)`` -- everything stage B's scan
+    consumes, computed at the unpadded width.
+    """
     c = _apply_channel_overrides(cha, ov)
-    n = c.rho.shape[0]
     t = _channel_terms(c)
-    rate_hi, rate_lo = t["rate_hi"], t["rate_lo"]
-    p_leave, p_enter = t["p_leave"], t["p_enter"]
-    q_b, s_small = t["q_b"], t["s_small"]
+    q_b, s_small, p_stall = t["q_b"], t["s_small"], t["p_stall"]
     sn, xb = c.stall_ns, c.stall_break_ns
     a1, a2, cap = c.stall_alpha, c.stall_alpha2, c.stall_max_ns
+    u5 = _lane_uniforms(key, lane_idx, (chunk, 5))    # (chunk, 5, n)
+    switch_u, arrive_u, jitter_u, svc_u, size_u = jnp.moveaxis(u5, 1, 0)
+    jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns
+    # Inverse-CDF sample of the two-slope law: the uniform IS the
+    # survival value -- above q_b the first slope applies, below it the
+    # far tail, capped at the max.
+    u = jnp.maximum(size_u, 1e-7)
+    stall = jnp.where(u > q_b, sn * u ** (-1.0 / a1),
+                      xb * (q_b / u) ** (1.0 / a2))
+    stall = jnp.minimum(stall, cap)
+    svc = jnp.where(svc_u < p_stall, stall, s_small)
+    return switch_u, arrive_u, jitter, svc
+
+
+_ts_draws_jit = jax.jit(_ts_draws, static_argnames=("chunk",))
+
+
+def _scan_terms(cha: ChannelArrays, ov):
+    """Per-run channel constants consumed by the stage B scans (computed
+    once at the unpadded width, like stage A): MMPP switch/rate terms,
+    the admission bound, and the deterministic access latency
+    ``lat0 = service + pipeline + CXL``."""
+    c = _apply_channel_overrides(cha, ov)
+    t = _channel_terms(c)
+    return dict(p_leave=t["p_leave"], p_enter=t["p_enter"],
+                rate_hi=t["rate_hi"], rate_lo=t["rate_lo"],
+                bound=c.outstanding * c.t_xfer_ns,
+                lat0=c.service_ns + 2.0 + c.cxl_lat_ns)
+
+
+_scan_terms_jit = jax.jit(_scan_terms)
+
+
+def _ts_chunk_core(terms, state, lane_idx, switch_u, arrive_u, jitter, svc,
+                   record, n_total: int):
+    """Stage B of the timestep engine: one chunk of the backlog scan.
+
+    The per-nanosecond recursion over stage A's precomputed draws.
+    Instead of scatter-updating a histogram carried through the scan,
+    the body EMITS ``(latency, arrive * record)`` and the histogram
+    indices are produced post-scan, vectorized over the whole chunk (the
+    host accumulates them with one ``bincount``).  Counts are small
+    integers, exact in either accumulation order, so the emission
+    micro-opt and the per-shard merge are both exact.
+    """
+    _TRACE_COUNT["timestep"] += 1  # side effect runs at trace time only
+    n = lane_idx.shape[0]
+    p_leave, p_enter = terms["p_leave"], terms["p_enter"]
+    rate_hi, rate_lo = terms["rate_hi"], terms["rate_lo"]
+    bound, lat0 = terms["bound"], terms["lat0"]
 
     # Strong-typed 0/1 so the carry dtype is stable across chunk calls
     # (a weak-typed literal would force a second trace of the kernel).
     zero, one = jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32)
 
     def step(carry, xs):
-        key, rec = xs
+        sw, au, jit_ns, s, rec = xs
         backlog, in_burst = carry
-        # One fused threefry draw per step (fewer key derivations than
-        # split-per-stream): rows are switch / arrival / jitter /
-        # blocking-or-not / blocking size.
-        switch_u, arrive_u, jitter_u, svc_u, size_u = \
-            jax.random.uniform(key, (5, n))
         in_burst = jnp.where(
             in_burst > 0.5,
-            jnp.where(switch_u < p_leave, zero, one),
-            jnp.where(switch_u < p_enter, one, zero))
+            jnp.where(sw < p_leave, zero, one),
+            jnp.where(sw < p_enter, one, zero))
         rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
-        arrive = (arrive_u < rate).astype(jnp.float32)
+        arrive = (au < rate).astype(jnp.float32)
         # Closed-loop population bound: while the backlog holds more than
         # ``outstanding`` requests' worth of work the MSHRs are full and
         # the core stalls instead of issuing -- the arrival is blocked,
         # not queued.  inf (the default) admits everything: open loop.
-        arrive = arrive * (backlog <= c.outstanding * c.t_xfer_ns
-                           ).astype(jnp.float32)
-        jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns
-        latency = backlog + c.service_ns + 2.0 + jitter + c.cxl_lat_ns
-        # Inverse-CDF sample of the two-slope law: the uniform IS the
-        # survival value -- above q_b the first slope applies, below it
-        # the far tail, capped at the max.
-        u = jnp.maximum(size_u, 1e-7)
-        stall = jnp.where(u > q_b, sn * u ** (-1.0 / a1),
-                          xb * (q_b / u) ** (1.0 / a2))
-        stall = jnp.minimum(stall, cap)
-        svc = jnp.where(svc_u < c.stall_prob, stall, s_small)
-        backlog = jnp.maximum(backlog + arrive * svc - 1.0, 0.0)
+        arrive = arrive * (backlog <= bound).astype(jnp.float32)
+        latency = backlog + lat0 + jit_ns
+        # arrive is an exact 0/1, so ``backlog + arrive * s`` cannot be
+        # perturbed by FMA contraction -- stage B stays compile-exact.
+        backlog = jnp.maximum(backlog + arrive * s - 1.0, 0.0)
         return (backlog, in_burst), (latency, arrive * rec)
 
-    state, (lat, mask) = jax.lax.scan(step, state, (keys, record))
-    return state, _flat_bins(lat, mask > 0.0, c)
+    state, (lat, mask) = jax.lax.scan(
+        step, state, (switch_u, arrive_u, jitter, svc, record))
+    return state, _flat_bins(lat, mask > 0.0, lane_idx, n_total)
 
 
-def _flat_bins(lat, rec, c: ChannelArrays):
-    """Post-scan vectorized histogram indices for one chunk.
+@functools.lru_cache(maxsize=None)
+def _ts_kernel(ndev: int, n_total: int, n_real: int):
+    """The jitted (and, for ``ndev > 1``, lane-sharded) stage B timestep
+    kernel.  Pads stage A's unpadded outputs to the device multiple
+    in-jit (pure data movement), then runs the scan per lane shard."""
+    pad = n_total - n_real
+    lane_idx = jnp.arange(n_total, dtype=jnp.int32)
 
-    ``lat``/``rec`` are ``(C, n)``; returns flattened ``lane * N_BINS +
-    bin`` int32 indices with unrecorded entries parked in one overflow
-    slot (``n * N_BINS``) -- the host drops it after ``bincount``, so no
-    boolean compaction is needed on either side.
-    """
-    n = c.rho.shape[0]
-    bins = jnp.clip((lat * (1.0 / BIN_NS)).astype(jnp.int32), 0, N_BINS - 1)
-    off = (jnp.arange(n, dtype=jnp.int32) * N_BINS)[None, :]
-    return jnp.where(rec, bins + off, n * N_BINS)
+    def body(terms, state, lanes, switch_u, arrive_u, jitter, svc, record):
+        return _ts_chunk_core(terms, state, lanes, switch_u, arrive_u,
+                              jitter, svc, record, n_total)
 
+    L, R = shardsim.lanes(), shardsim.replicated()
+    L1 = shardsim.lanes(1)
+    fn = shardsim.jit_lanes(
+        body, ndev,
+        in_specs=(L, L, L, L1, L1, L1, L1, R),
+        out_specs=(L, L1))
 
-_ts_chunk_jit = jax.jit(_ts_chunk_core)
+    def run(terms, state, switch_u, arrive_u, jitter, svc, record):
+        # NaN terms / zeroed draws on padding lanes: they never arrive,
+        # never record, and park all mass in the overflow slot.
+        terms = {k: _pad_cols(v, pad, np.nan) for k, v in terms.items()}
+        return fn(terms, state, lane_idx,
+                  _pad_cols(switch_u, pad, 0.0), _pad_cols(arrive_u, pad, 0.0),
+                  _pad_cols(jitter, pad, 0.0), _pad_cols(svc, pad, 0.0),
+                  record)
+
+    return jax.jit(run)
 
 
 # ---------------------------------------------------------------------------
 # Event engine: per-request Lindley scan.
 # ---------------------------------------------------------------------------
 
-def _event_tables(cha: ChannelArrays, ov, key, n_sojourns: int):
+def _event_tables(cha: ChannelArrays, ov, lane_idx, key, n_sojourns: int):
     """Simulate the MMPP modulating chain once per call (per lane).
 
-    Alternating exponential sojourns starting in the burst state; returns
+    Alternating exponential sojourns starting in the burst state (drawn
+    from the lane-keyed streams, :func:`_lane_uniforms`); returns
     per-lane ``(M+1,)`` rows of cumulative intensity ``L``, boundary time
     ``T`` and segment rate -- the piecewise-linear cumulative-intensity
     table the chunk kernel inverts.  The appended final segment extends
@@ -433,7 +590,7 @@ def _event_tables(cha: ChannelArrays, ov, key, n_sojourns: int):
     c = _apply_channel_overrides(cha, ov)
     n = c.rho.shape[0]
     t = _channel_terms(c)
-    su = jax.random.uniform(key, (n_sojourns, n), minval=1e-12)
+    su = _lane_uniforms(key, lane_idx, (n_sojourns,), minval=1e-12)
     burst = (jnp.arange(n_sojourns) % 2 == 0)[:, None]
     soj = -jnp.log(su) * jnp.where(burst, 1.0 / t["p_leave"],
                                    1.0 / t["p_enter"])
@@ -450,9 +607,9 @@ def _event_tables(cha: ChannelArrays, ov, key, n_sojourns: int):
 _event_tables_jit = jax.jit(_event_tables, static_argnames=("n_sojourns",))
 
 
-def _event_chunk_core(cha: ChannelArrays, ov, state, key, tabs, warmup_ns,
-                      chunk: int):
-    """One chunk of the per-request Lindley engine.
+def _event_arrivals(cha: ChannelArrays, ov, state, lane_idx, key, tabs,
+                    warmup_ns, chunk: int):
+    """Stage A of the event engine: one chunk of arrivals + services.
 
     Per candidate request, in vectorized passes: a unit-exponential
     increment of cumulative intensity, inverted through the MMPP's
@@ -462,32 +619,23 @@ def _event_chunk_core(cha: ChannelArrays, ov, state, key, tabs, warmup_ns,
     one arrival, which is exactly the Bernoulli-per-ns arrival law, gap
     by gap); a service draw from the shared two-slope law (selection and
     size from ONE uniform: conditioned on ``u < stall_prob``,
-    ``u / stall_prob`` is again uniform).  The only sequential part is
-    the Lindley/admission recursion itself -- a four-op scan body:
-
-        W <- max(W - A_k, 0);  admit = W <= outstanding * t_xfer;
-        emit W;                W <- W + admit * S_k
-
-    (phantom same-cell candidates carry ``A = 0``, ``S = 0`` and are
-    masked out of the histogram, so they are invisible to the queue).
-    Latencies are ``W`` plus the deterministic access terms; the uniform
-    DRAM jitter is convolved into the histogram afterwards (it never
-    feeds the queue).
+    ``u / stall_prob`` is again uniform).  Runs at the unpadded width
+    (its logs/exps must not recompile with the device count); stage B
+    gets ``(gaps, svc, rec_time)`` plus this stage's own
+    ``(u_last, t_last)`` carry.
     """
-    _TRACE_COUNT["event"] += 1  # side effect runs at trace time only
     c = _apply_channel_overrides(cha, ov)
     n = c.rho.shape[0]
     t = _channel_terms(c)
-    q_b, s_small = t["q_b"], t["s_small"]
+    q_b, s_small, p_stall = t["q_b"], t["s_small"], t["p_stall"]
     sn, xb = c.stall_ns, c.stall_break_ns
     a1, a2, cap = c.stall_alpha, c.stall_alpha2, c.stall_max_ns
     log_qb = jnp.log(q_b)
-    bound = c.outstanding * c.t_xfer_ns
     Lt, packed = tabs
     m = Lt.shape[1] - 1
 
-    W, u_last, t_last = state
-    u = jax.random.uniform(key, (2, chunk, n), minval=1e-12)
+    u_last, t_last = state
+    u = _lane_uniforms(key, lane_idx, (2, chunk), minval=1e-12)
     lg = jnp.log(u)                       # one fused pass for both rows
     # Arrival times: unit-exponential increments of cumulative intensity,
     # inverted through the per-lane piecewise-linear table.  The queries
@@ -514,13 +662,40 @@ def _event_chunk_core(cha: ChannelArrays, ov, state, key, tabs, warmup_ns,
     # one exp for the whole two-slope inverse CDF (the slope pick happens
     # in log space).
     us = u[1]
-    lu = lg[1] - jnp.log(c.stall_prob)
-    log_stall = jnp.where(us > q_b * c.stall_prob,
+    lu = lg[1] - jnp.log(p_stall)
+    log_stall = jnp.where(us > q_b * p_stall,
                           jnp.log(sn) - lu / a1,
                           jnp.log(xb) + (log_qb - lu) / a2)
-    svc = jnp.where(us < c.stall_prob,
+    svc = jnp.where(us < p_stall,
                     jnp.minimum(jnp.exp(log_stall), cap), s_small)
     svc = jnp.where(real, svc, 0.0)    # phantoms add no work
+    # Lattice cell k is recorded iff the timestep engine would record
+    # step k-1, i.e. past the warmup window (stage B adds the admission
+    # test, whose witness is the emitted wait itself).
+    rec_time = real & (arr_t > warmup_ns + 0.5)
+    return (upos[-1], arr_t[-1]), gaps, svc, rec_time
+
+
+_event_arrivals_jit = jax.jit(_event_arrivals, static_argnames=("chunk",))
+
+
+def _event_chunk_core(terms, W, lane_idx, gaps, svc, rec_time,
+                      n_total: int):
+    """Stage B of the event engine: one chunk of the Lindley recursion.
+
+    The only sequential part of the engine -- a four-op scan body:
+
+        W <- max(W - A_k, 0);  admit = W <= outstanding * t_xfer;
+        emit W;                W <- W + admit * S_k
+
+    (phantom same-cell candidates carry ``A = 0``, ``S = 0`` and are
+    masked out of the histogram, so they are invisible to the queue).
+    Latencies are ``W`` plus the deterministic access terms; the uniform
+    DRAM jitter is convolved into the histogram afterwards (it never
+    feeds the queue).
+    """
+    _TRACE_COUNT["event"] += 1  # side effect runs at trace time only
+    bound, lat0 = terms["bound"], terms["lat0"]
 
     def event(wc, xs):
         gap, s = xs
@@ -530,14 +705,40 @@ def _event_chunk_core(cha: ChannelArrays, ov, state, key, tabs, warmup_ns,
     W, wq = jax.lax.scan(event, W, (gaps, svc), unroll=8)
     # The emitted wait IS the admission witness: recompute the bound test
     # vectorized instead of emitting a second buffer from the scan.
-    # Lattice cell k is recorded iff the timestep engine would record
-    # step k-1, i.e. past the warmup window.
-    lat = wq + c.service_ns + 2.0 + c.cxl_lat_ns
-    rec = real & (wq <= bound) & (arr_t > warmup_ns + 0.5)
-    return (W, upos[-1], arr_t[-1]), _flat_bins(lat, rec, c)
+    lat = wq + lat0
+    rec = rec_time & (wq <= bound)
+    return W, _flat_bins(lat, rec, lane_idx, n_total)
 
 
-_event_chunk_jit = jax.jit(_event_chunk_core, static_argnames=("chunk",))
+@functools.lru_cache(maxsize=None)
+def _event_kernel(ndev: int, n_total: int, n_real: int, chunk: int):
+    """The jitted (and, for ``ndev > 1``, lane-sharded) stage B event
+    kernel.  Pads stage A's unpadded outputs to the device multiple
+    in-jit (pure data movement), then runs the scan per lane shard."""
+    pad = n_total - n_real
+    lane_idx = jnp.arange(n_total, dtype=jnp.int32)
+
+    def body(terms, W, lanes, gaps, svc, rec_time):
+        return _event_chunk_core(terms, W, lanes, gaps, svc, rec_time,
+                                 n_total)
+
+    L, R = shardsim.lanes(), shardsim.replicated()
+    L1 = shardsim.lanes(1)
+    fn = shardsim.jit_lanes(
+        body, ndev,
+        in_specs=(L, L, L, L1, L1, L1),
+        out_specs=(L, L1))
+
+    def run(terms, W, gaps, svc, rec_time):
+        # Padding lanes: unit gaps, zero service, never recorded and a
+        # NaN bound (every comparison false), so their wait stays 0 and
+        # all their mass parks in the overflow slot.
+        terms = {k: _pad_cols(v, pad, np.nan) for k, v in terms.items()}
+        return fn(terms, W, lane_idx,
+                  _pad_cols(gaps, pad, 1.0), _pad_cols(svc, pad, 0.0),
+                  _pad_cols(rec_time, pad, False))
+
+    return jax.jit(run)
 
 
 def events_for_steps(steps: int) -> int:
@@ -693,66 +894,85 @@ def _accumulate_chunks(dispatch, n_chunks: int, n: int) -> np.ndarray:
     return hist[:-1].reshape(n, N_BINS).astype(np.float64)
 
 
-def _run_timestep(cha, ov, steps, seed, warmup):
-    n = int(np.shape(cha.rho)[0])
-    pad = (-steps) % _TS_CHUNK
-    keys = np.zeros((steps + pad, 2), np.uint32)
-    keys[:steps] = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
-                                               steps))
-    record = np.zeros(steps + pad, np.float32)
+def _run_timestep(cha, ov, steps, seed, warmup, ndev, n_real, pad):
+    n_tot = n_real + pad
+    # Chunk length derives from the UNPADDED width: the chunk schedule is
+    # part of the stream contract, padding is a device-count artifact.
+    chunk = _ts_chunk_len(n_real)
+    n_chunks = -(-steps // chunk)
+    ckeys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), n_chunks))
+    record = np.zeros(n_chunks * chunk, np.float32)
     record[warmup:steps] = 1.0
-    state = (jnp.zeros(n), jnp.ones(n))
-    chunks = []
+    lane_r = jnp.arange(n_real, dtype=jnp.int32)
+    terms = _scan_terms_jit(cha, ov)
+    state = (jnp.zeros(n_tot), jnp.ones(n_tot))
+    fn = _ts_kernel(ndev, n_tot, n_real)
 
     def dispatch(k):
         nonlocal state
-        sl = slice(k * _TS_CHUNK, (k + 1) * _TS_CHUNK)
-        state, flat = _ts_chunk_jit(cha, ov, state,
-                                    jnp.asarray(keys[sl]),
-                                    jnp.asarray(record[sl]))
+        sw, au, jit_ns, svc = _ts_draws_jit(cha, ov, lane_r,
+                                            jnp.asarray(ckeys[k]),
+                                            chunk=chunk)
+        state, flat = fn(terms, state, sw, au, jit_ns, svc,
+                         jnp.asarray(record[k * chunk:(k + 1) * chunk]))
         return flat
 
-    return _accumulate_chunks(dispatch, (steps + pad) // _TS_CHUNK, n)
+    return _accumulate_chunks(dispatch, n_chunks, n_tot)[:n_real]
 
 
-def _run_event(cha, ov, steps, seed, warmup, events):
-    n = int(np.shape(cha.rho)[0])
-    chunk = _event_chunk_len(n)
+def _run_event(cha, ov, steps, seed, warmup, events, ndev, n_real, pad):
+    n_tot = n_real + pad
+    chunk = _event_chunk_len(n_real)
     n_chunks = -(-events // chunk)
     n_sojourns = max(64, (n_chunks * chunk) // _SOJOURN_DIV)
     phase_key, chunk_root = jax.random.split(jax.random.PRNGKey(seed))
     keys = jax.random.split(chunk_root, n_chunks)
-    tabs = _event_tables_jit(cha, ov, phase_key, n_sojourns)
-    state = (jnp.zeros(n), jnp.zeros(n), jnp.zeros(n))
+    lane_r = jnp.arange(n_real, dtype=jnp.int32)
+    tabs = _event_tables_jit(cha, ov, lane_r, phase_key,
+                             n_sojourns=n_sojourns)
+    terms = _scan_terms_jit(cha, ov)
+    state_a = (jnp.zeros(n_real), jnp.zeros(n_real))
+    W = jnp.zeros(n_tot)
     warm = jnp.float32(warmup)
+    fn = _event_kernel(ndev, n_tot, n_real, chunk)
 
     def dispatch(k):
-        nonlocal state
-        state, flat = _event_chunk_jit(cha, ov, state, keys[k], tabs, warm,
-                                       chunk=chunk)
+        nonlocal state_a, W
+        state_a, gaps, svc, rec_time = _event_arrivals_jit(
+            cha, ov, state_a, lane_r, keys[k], tabs, warm, chunk=chunk)
+        W, flat = fn(terms, W, gaps, svc, rec_time)
         return flat
 
-    hist = _accumulate_chunks(dispatch, n_chunks, n)
+    hist = _accumulate_chunks(dispatch, n_chunks, n_tot)[:n_real]
     # Jitter is additive observation noise: convolve its exact uniform
     # distribution into the histogram (per-lane effective width).
-    width = np.where(np.isnan(np.asarray(ov["service_jitter_ns"])),
-                     np.asarray(cha.service_jitter_ns),
-                     np.asarray(ov["service_jitter_ns"]))
+    width = np.where(np.isnan(np.asarray(ov["service_jitter_ns"])[:n_real]),
+                     np.asarray(cha.service_jitter_ns)[:n_real],
+                     np.asarray(ov["service_jitter_ns"])[:n_real])
     return _convolve_jitter(hist, width)
+
+
+def merge_reps(stats: LatencyStats) -> LatencyStats:
+    """Merge a ``keep_reps=True`` result over its leading replica axis.
+
+    Histogram counts are integers, so merging after the fact is exactly
+    the ``keep_reps=False`` result.
+    """
+    return _stats_from_hist(stats.hist.sum(axis=0))
 
 
 def simulate_cells(cha: ChannelArrays, *, overrides=None,
                    steps: int = 200_000, seed: int = 0,
                    warmup: int | None = None, reps: int = 1,
-                   engine: str = "timestep",
-                   events: int | None = None) -> LatencyStats:
+                   engine: str = "timestep", events: int | None = None,
+                   devices=None, keep_reps: bool = False) -> LatencyStats:
     """Simulate N flattened cells in one jitted batch.
 
     ``cha`` leaves are ``(N,)``; ``overrides`` maps channel fields to
     ``(N,)`` arrays with NaN meaning "keep the channel's own value".
     Missing override fields are filled with NaN so the jit cache keys on
     the flattened cell count alone -- any axis combination of the same
-    flattened size shares one compile per engine.
+    flattened size shares one compile per engine (and device count).
 
     ``steps`` is the simulated-time budget in ns for EITHER engine;
     ``engine="event"`` converts it to a per-request budget
@@ -761,9 +981,21 @@ def simulate_cells(cha: ChannelArrays, *, overrides=None,
     excluded from the histograms.  ``reps`` runs that many independent
     replicas of every cell in the same batch and merges their histograms
     -- variance reduction that costs almost nothing next to the per-step
-    (or per-request) dispatch.  Results are exactly reproducible per
-    ``(engine, seed, budget, N)``; the two engines draw different
-    streams and agree statistically, not bitwise.
+    (or per-request) dispatch; ``keep_reps=True`` skips the merge and
+    returns stats with a leading ``(reps,)`` axis instead (per-replica
+    batched means, e.g. for standard-error estimates -- see
+    :func:`merge_reps`).
+
+    ``devices`` shards the flattened ``(cells x reps)`` lane axis over
+    that many host devices (``None`` consults ``$REPRO_DES_DEVICES``,
+    default 1; ``"auto"`` uses all local devices).  The batch is
+    NaN-padded to a multiple of the device count; lane-keyed streams and
+    global-lane histogram slots make the result BIT-IDENTICAL at any
+    device count -- the knob trades wall-clock only.
+
+    Results are exactly reproducible per ``(engine, seed, budget, N)``;
+    the two engines draw different streams and agree statistically, not
+    bitwise.
     """
     _check_engine(engine)
     n = int(np.shape(cha.rho)[0])
@@ -777,44 +1009,60 @@ def simulate_cells(cha: ChannelArrays, *, overrides=None,
     if events is not None and engine != "event":
         raise ValueError("events is an event-engine budget; use steps "
                          "for the timestep engine")
-    tile = lambda v: jnp.tile(jnp.asarray(np.asarray(v, np.float32)), reps)
-    ov = _nan_overrides(n * reps)
+    ndev = shardsim.resolve_devices(devices)
+    n_real = n * reps
+    # cha/ov stay at the UNPADDED width: stage A and the per-run terms
+    # compile against n_real only, so their executables (and hence every
+    # transcendental rounding) are shared across device counts; stage B
+    # pads its inputs to the device multiple internally.
+    pad = shardsim.pad_width(n_real, ndev)
+
+    def tile(v):
+        return jnp.tile(jnp.asarray(np.asarray(v, np.float32)), reps)
+
+    ov = _nan_overrides(n_real)
     ov.update({f: tile(v) for f, v in (overrides or {}).items()})
     cha = ChannelArrays(*(tile(leaf) for leaf in cha))
     if engine == "timestep":
-        hist = _run_timestep(cha, ov, int(steps), seed, warmup)
+        hist = _run_timestep(cha, ov, int(steps), seed, warmup,
+                             ndev, n_real, pad)
     else:
         events = (events_for_steps(steps) if events is None
                   else max(1, int(events)))
-        hist = _run_event(cha, ov, int(steps), seed, warmup, events)
-    hist = hist.reshape(reps, n, -1).sum(axis=0)
-    return _stats_from_hist(hist)
+        hist = _run_event(cha, ov, int(steps), seed, warmup, events,
+                          ndev, n_real, pad)
+    hist = hist.reshape(reps, n, -1)
+    if keep_reps:
+        return _stats_from_hist(hist)
+    return _stats_from_hist(hist.sum(axis=0))
 
 
 def simulate(configs, steps: int = 200_000, seed: int = 0,
              warmup: int | None = None, reps: int = 1,
-             engine: str = "timestep") -> LatencyStats:
+             engine: str = "timestep", devices=None) -> LatencyStats:
     """Simulate a batch of :class:`ChannelConfig` and return stats.
 
     Thin shim over :func:`simulate_cells` -- bit-identical to any
     distribution sweep whose flat cells match ``configs`` in order (same
-    engine, seed, steps, warmup and reps => same random streams).
+    engine, seed, steps, warmup and reps => same random streams, at any
+    ``devices``).
     """
     return simulate_cells(stack_channels(configs), steps=steps, seed=seed,
-                          warmup=warmup, reps=reps, engine=engine)
+                          warmup=warmup, reps=reps, engine=engine,
+                          devices=devices)
 
 
 def load_latency_curve(rhos=None, kappa: float = 1.0, cxl_lat_ns: float = 0.0,
                        steps: int = 200_000, seed: int = 0,
                        warmup: int | None = None, reps: int = 1,
-                       engine: str = "timestep") -> dict:
+                       engine: str = "timestep", devices=None) -> dict:
     """Fig 2a: mean/p90 latency vs bus utilization for one channel type."""
     if rhos is None:
         rhos = np.linspace(0.05, 0.95, 19)
     configs = [ChannelConfig(rho=float(r), kappa=kappa,
                              cxl_lat_ns=cxl_lat_ns) for r in rhos]
     stats = simulate(configs, steps=steps, seed=seed, warmup=warmup,
-                     reps=reps, engine=engine)
+                     reps=reps, engine=engine, devices=devices)
     return dict(rho=np.asarray(rhos), mean_ns=stats.mean_ns,
                 p90_ns=stats.p90_ns, p99_ns=stats.p99_ns,
                 stdev_ns=stats.stdev_ns)

@@ -2,32 +2,37 @@
 
 ``cpu_model``'s fixed point needs, per workload and per iteration, the
 DRAM-side queue wait at an operating point (utilization ``rho``, burstiness
-``kappa``, closed-loop population ``outstanding``).  The closed form
-(``queueing.effective_queue_wait_ns``) answers that analytically; this
-module answers it *mechanistically*: one batched
+``kappa``, closed-loop population ``outstanding``, DRAM-sensitivity ``eta``).
+The closed form (``queueing.effective_queue_wait_ns``) answers that
+analytically; this module answers it *mechanistically*: one batched
 ``coaxial.distribution_sweep`` runs the DES (``memsim``) over a
-(rho, kappa, outstanding) grid -- ``outstanding`` is a real simulated
-field, the finite in-flight population that caps the FIFO backlog -- and
-the resulting latency distributions are reduced to three tables
-(mean wait / p90 wait / latency stdev).
+(rho, kappa, outstanding, eta) grid -- ``outstanding`` is a real simulated
+field (the finite in-flight population that caps the FIFO backlog) and
+``eta`` scales the blocking-episode probability at fixed mean service
+time (the per-workload DRAM-sensitivity knob, now INSIDE the mechanism
+instead of a post-hoc multiplier on the wait) -- and the resulting
+latency distributions are reduced to three tables (mean wait / p90 wait /
+latency stdev).
 
 :class:`QueueLUT` is a pytree of those tables plus their grids, with
 **differentiable multilinear interpolation**: the lookup is piecewise
-(tri)linear in the query point, clamped to the grid hull, and pure
-``jnp`` -- so ``cpu_model`` can pass a LUT straight into its jitted cell
-solver (any named-axis grid still lowers to ONE trace per flattened cell
-count) and ``design_gradient`` can differentiate through the fixed point
-*and* the table.  Passing ``lut=None`` to the solver selects the closed
-form; the pytree-structure difference is what keys the jit cache, no
-static flags needed.
+linear in the query point (quadrilinear over the 4-D grid, with the
+``outstanding`` axis located in LOG space -- its grid is geometric, so
+log-space fractions interpolate the curvature instead of chord-cutting
+it), clamped to the grid hull, and pure ``jnp`` -- so ``cpu_model`` can
+pass a LUT straight into its jitted cell solver (any named-axis grid
+still lowers to ONE trace per flattened cell count) and
+``design_gradient`` can differentiate through the fixed point *and* the
+table.  Passing ``lut=None`` to the solver selects the closed form; the
+pytree-structure difference is what keys the jit cache, no static flags
+needed.
 
-Build cost: the default surface (14 x 6 x 6 grid) is one batched run of
-the per-request event engine (``memsim.ENGINES``; the finer-than-PR-4
-grid is what the event engine's speedup buys -- measured width-dependent
-on CPU by ``benchmarks/memsim_speed.py``, roughly 3.5x on this build's
-wide batch and far larger on narrow ones); :func:`default_queue_lut`
-caches it per (steps, seed, reps, engine), so a whole session pays for
-it once.
+Build cost: the default surface (14 x 6 x 6 x 4 grid) is one batched run
+of the per-request event engine -- the 4th axis is what the
+device-parallel DES (``memsim``'s ``devices`` knob, ``core/shardsim``)
+buys; pass ``devices=`` (or set ``$REPRO_DES_DEVICES``) to shard the
+build, bit-identically.  :func:`default_queue_lut` caches it per
+(steps, seed, reps, engine), so a whole session pays for it once.
 """
 
 from __future__ import annotations
@@ -54,9 +59,15 @@ DEFAULT_RHO_GRID = (0.05, 0.15, 0.25, 0.35, 0.45, 0.55, 0.62, 0.68,
 DEFAULT_KAPPA_GRID = (1.0, 1.3, 1.6, 2.2, 2.7, 3.2)
 #: Default closed-loop population grid: ``n_active * MAX_MLP /
 #: dram_channels`` spans ~2 (8 channels, 1 core) to 192 (the 12-core,
-#: 1-channel DDR baseline); geometric-ish spacing (the tight-bound end
-#: is where the wait surface curves hardest).
+#: 1-channel DDR baseline); GEOMETRIC spacing -- the lookup interpolates
+#: this axis in log space, where these points are near-uniform.
 DEFAULT_OUTSTANDING_GRID = (2.0, 4.0, 8.0, 24.0, 64.0, 192.0)
+#: Default DRAM-sensitivity grid: the Table-4 suite's eta spans ~0.05
+#: (cache-friendly codes barely touch the far tail) to 1.0 (stream-like
+#: codes take every blocking episode); the surface is near-linear in eta
+#: (the wait is dominated by the episode-probability term), so four
+#: points carry it.
+DEFAULT_ETA_GRID = (0.05, 0.30, 0.60, 1.0)
 #: Default DES budget per cell (ns simulated) and replicas per cell.
 DEFAULT_STEPS = 120_000
 DEFAULT_REPS = 2
@@ -68,76 +79,94 @@ DEFAULT_ENGINE = "event"
 
 
 class QueueLUT(NamedTuple):
-    """DES-measured queue-wait surface over (rho, kappa, outstanding).
+    """DES-measured queue-wait surface over (rho, kappa, outstanding, eta).
 
-    A pytree of six array leaves: three ascending coordinate grids and
-    three ``(R, K, O)`` tables -- mean queue wait, p90 queue wait, and
+    A pytree of eight array leaves: four ascending coordinate grids and
+    three ``(R, K, O, E)`` tables -- mean queue wait, p90 queue wait, and
     latency standard deviation (all ns).  :meth:`lookup` interpolates all
-    three multilinearly (clamped at the hull), vectorizes over any
-    broadcastable query shapes, works inside ``jit``, and is
-    differentiable in the query point.
+    three multilinearly (clamped at the hull; the ``outstanding`` axis in
+    log space), vectorizes over any broadcastable query shapes, works
+    inside ``jit``, and is differentiable in the query point.
 
     Example (a hand-built two-point surface; real tables come from
     :func:`build_queue_lut`)::
 
         >>> import jax.numpy as jnp
         >>> from repro.core.queuelut import QueueLUT
-        >>> z = jnp.zeros((2, 2, 2))
+        >>> z = jnp.zeros((2, 2, 2, 2))
         >>> lut = QueueLUT(rho_grid=jnp.array([0.0, 1.0]),
         ...                kappa_grid=jnp.array([1.0, 2.0]),
         ...                outstanding_grid=jnp.array([1.0, 100.0]),
+        ...                eta_grid=jnp.array([0.0, 1.0]),
         ...                wait_ns=z.at[1].set(80.0),
         ...                p90_wait_ns=z, sigma_ns=z)
-        >>> float(lut.wait(0.5, 1.0, 1.0))    # halfway up the rho edge
+        >>> float(lut.wait(0.5, 1.0, 1.0, 1.0))  # halfway up the rho edge
         40.0
-        >>> float(lut.wait(2.0, 1.0, 1.0))    # clamped at the grid hull
+        >>> float(lut.wait(2.0, 1.0, 1.0, 1.0))  # clamped at the grid hull
         80.0
+        >>> float(lut.wait(0.5, 1.0, 10.0, 1.0))  # log-space outstanding:
+        40.0
     """
 
     rho_grid: jnp.ndarray          # (R,) ascending
     kappa_grid: jnp.ndarray        # (K,) ascending
-    outstanding_grid: jnp.ndarray  # (O,) ascending
-    wait_ns: jnp.ndarray           # (R, K, O) mean queue wait
-    p90_wait_ns: jnp.ndarray       # (R, K, O) p90 queue wait
-    sigma_ns: jnp.ndarray          # (R, K, O) latency stdev
+    outstanding_grid: jnp.ndarray  # (O,) ascending, positive
+    eta_grid: jnp.ndarray          # (E,) ascending
+    wait_ns: jnp.ndarray           # (R, K, O, E) mean queue wait
+    p90_wait_ns: jnp.ndarray       # (R, K, O, E) p90 queue wait
+    sigma_ns: jnp.ndarray          # (R, K, O, E) latency stdev
 
-    def lookup(self, rho, kappa, outstanding):
+    def lookup(self, rho, kappa, outstanding, eta=1.0):
         """Interpolated ``(mean wait, p90 wait, sigma)`` at a query point.
 
         Queries broadcast together; out-of-grid coordinates clamp to the
         nearest hull face (constant extrapolation -- the DES was not run
-        there, so the table refuses to invent a steeper law).
+        there, so the table refuses to invent a steeper law).  The
+        ``outstanding`` fraction is computed in log space: its grid is
+        geometric, and a query like 96 on a (64, 192) cell should sit
+        near the geometric midpoint, not 1/4 from the top.
         """
         pts = jnp.broadcast_arrays(*(jnp.asarray(x, self.wait_ns.dtype)
-                                     for x in (rho, kappa, outstanding)))
-        grids = (self.rho_grid, self.kappa_grid, self.outstanding_grid)
-        loc = [_locate(g, p) for g, p in zip(grids, pts)]
+                                     for x in (rho, kappa, outstanding,
+                                               eta)))
+        grids = (self.rho_grid, self.kappa_grid, self.outstanding_grid,
+                 self.eta_grid)
+        logs = (False, False, True, False)
+        loc = [_locate(g, p, log=lg)
+               for g, p, lg in zip(grids, pts, logs)]
         return tuple(_blend(t, loc) for t in
                      (self.wait_ns, self.p90_wait_ns, self.sigma_ns))
 
-    def wait(self, rho, kappa, outstanding):
+    def wait(self, rho, kappa, outstanding, eta=1.0):
         """Interpolated mean queue wait alone (ns)."""
-        return self.lookup(rho, kappa, outstanding)[0]
+        return self.lookup(rho, kappa, outstanding, eta)[0]
 
 
-def _locate(grid, x):
+def _locate(grid, x, log: bool = False):
     """(lower index, fraction) of ``x`` on an ascending grid, clamped.
 
     The fraction is what gradients flow through (piecewise linear); the
     index is integer and carries none, which is exactly the derivative a
-    multilinear surface has.
+    multilinear surface has.  ``log=True`` computes the fraction between
+    the bracketing points in log space -- true geometric interpolation
+    for geometrically spaced grids (the grid must be positive).
     """
     x = jnp.clip(x, grid[0], grid[-1])
     i = jnp.clip(jnp.searchsorted(grid, x, side="right") - 1,
                  0, grid.shape[0] - 2)
-    t = (x - grid[i]) / (grid[i + 1] - grid[i])
+    lo, hi = grid[i], grid[i + 1]
+    if log:
+        t = jnp.log(x / lo) / jnp.log(hi / lo)
+    else:
+        t = (x - lo) / (hi - lo)
     return i, jnp.clip(t, 0.0, 1.0)
 
 
 def _blend(table, loc):
-    """Trilinear blend of the 8 corner cells around a located point."""
+    """Multilinear blend of the ``2**d`` corner cells around a located
+    point (``d = len(loc)`` grid axes)."""
     out = 0.0
-    for corner in range(8):
+    for corner in range(2 ** len(loc)):
         w = 1.0
         idx = []
         for d, (i, t) in enumerate(loc):
@@ -148,57 +177,64 @@ def _blend(table, loc):
     return out
 
 
-def _check_grid(name, grid):
+def _check_grid(name, grid, positive: bool = False):
     g = np.asarray(grid, np.float64)
     if g.ndim != 1 or g.size < 2:
         raise ValueError(f"{name} grid needs >= 2 points, got {g.shape}")
     if not np.all(np.diff(g) > 0):
         raise ValueError(f"{name} grid must be strictly ascending: "
                          f"{g.tolist()}")
+    if positive and g[0] <= 0:
+        raise ValueError(f"{name} grid must be positive (it interpolates "
+                         f"in log space): {g.tolist()}")
     return tuple(float(v) for v in g)
 
 
 def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
                     outstanding=DEFAULT_OUTSTANDING_GRID,
+                    eta=DEFAULT_ETA_GRID,
                     steps: int = DEFAULT_STEPS, seed: int = 0,
                     reps: int = DEFAULT_REPS, base=None,
-                    engine: str = DEFAULT_ENGINE) -> QueueLUT:
+                    engine: str = DEFAULT_ENGINE,
+                    devices=None) -> QueueLUT:
     """Run ONE batched distribution sweep and reduce it to a QueueLUT.
 
-    The whole (rho x kappa x outstanding) grid lowers to one jitted
+    The whole (rho x kappa x outstanding x eta) grid lowers to one jitted
     simulation (``coaxial.distribution_sweep``); the wait tables are
     the DES latency means/p90s minus the unloaded DRAM service time, and
     the sigma table is the DES latency stdev verbatim -- the measured
     replacement for ``queueing.stdev_latency_ns``'s heuristic.
-    ``engine`` picks the memsim engine; the default is the per-request
-    event engine, which is what makes the default grid's resolution
-    affordable (``benchmarks/memsim_speed.py`` times the same build on
-    both engines and cross-checks the resulting tables).
+    ``engine`` picks the memsim engine; ``devices`` shards the build's
+    flattened cell batch over host devices (``None`` consults
+    ``$REPRO_DES_DEVICES``) -- the default 4-D grid is what the sharded
+    DES buys, and the tables are bit-identical at any device count.
 
     Example (tiny grid, doctest-sized budget)::
 
         >>> from repro.core.queuelut import build_queue_lut
         >>> lut = build_queue_lut(rho=(0.2, 0.6), kappa=(1.0, 2.0),
-        ...                       outstanding=(8.0, 192.0), steps=4000,
-        ...                       reps=1)
+        ...                       outstanding=(8.0, 192.0),
+        ...                       eta=(0.1, 1.0), steps=4000, reps=1)
         >>> lut.wait_ns.shape
-        (2, 2, 2)
-        >>> bool(lut.wait(0.6, 1.0, 192.0) > lut.wait(0.2, 1.0, 192.0))
+        (2, 2, 2, 2)
+        >>> bool(lut.wait(0.6, 1.0, 192.0, 1.0) >
+        ...      lut.wait(0.2, 1.0, 192.0, 1.0))
         True
     """
     from repro.core import coaxial  # runtime: coaxial imports cpu_model
     rho = _check_grid("rho", rho)
     kappa = _check_grid("kappa", kappa)
-    outstanding = _check_grid("outstanding", outstanding)
+    outstanding = _check_grid("outstanding", outstanding, positive=True)
+    eta = _check_grid("eta", eta)
     sw = coaxial.distribution_sweep(
-        rho=rho, kappa=kappa, outstanding=outstanding,
+        rho=rho, kappa=kappa, outstanding=outstanding, eta=eta,
         base=base, steps=int(steps), seed=int(seed), reps=int(reps),
-        engine=engine)
+        engine=engine, devices=devices)
     stats = sw.stats
     to_j = lambda x: jnp.asarray(np.asarray(x, np.float64))
     return QueueLUT(
         rho_grid=to_j(rho), kappa_grid=to_j(kappa),
-        outstanding_grid=to_j(outstanding),
+        outstanding_grid=to_j(outstanding), eta_grid=to_j(eta),
         wait_ns=to_j(np.maximum(stats.mean_ns - hw.DRAM_SERVICE_NS, 0.0)),
         p90_wait_ns=to_j(np.maximum(stats.p90_ns - hw.DRAM_SERVICE_NS, 0.0)),
         sigma_ns=to_j(stats.stdev_ns))
@@ -212,7 +248,9 @@ def default_queue_lut(steps: int = DEFAULT_STEPS, seed: int = 0,
     reps, engine).
 
     This is what ``cpu_model.solve(..., queue_model="memsim")`` uses when
-    no explicit LUT is passed.
+    no explicit LUT is passed.  The build honours ``$REPRO_DES_DEVICES``
+    (via ``devices=None``), and the tables are device-count-invariant, so
+    the cache key need not include it.
     """
     return build_queue_lut(steps=steps, seed=seed, reps=reps,
                            engine=engine)

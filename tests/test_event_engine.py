@@ -1,10 +1,11 @@
 """The two-engine contract of memsim.
 
-  * the timestep engine's satellite micro-opt (scan-emitted
-    ``(latency, mask)`` + one post-scan histogram, replacing the
-    per-step ``at[].add`` scatter) is BIT-IDENTICAL to the historical
-    in-scan-scatter engine -- pinned by re-implementing the old core
-    here and comparing histograms exactly;
+  * the timestep engine (lane-keyed streams + scan-emitted
+    ``(latency, mask)`` + one post-scan histogram) is BIT-IDENTICAL to
+    an in-scan-scatter reference that re-derives the stream contract
+    (chunk keys split from the seed, one threefry stream per lane via
+    ``fold_in``) and every law from scratch -- pinned by comparing
+    histograms exactly;
   * the event engine reproduces exactly per seed, costs one kernel
     trace per flattened cell count (its own counter, independent of the
     timestep engine's), honours the closed-loop ``outstanding`` bound,
@@ -31,9 +32,10 @@ class TestTimestepMicroOpt:
 
     @staticmethod
     def _old_scatter_sim(configs, steps, seed, warmup):
-        """The pre-micro-opt reference core: per-step histogram scatter
-        carried through one monolithic scan (verbatim re-implementation
-        of the historical ``_sim_core``)."""
+        """The in-scan-scatter reference core: per-step histogram scatter
+        carried through one scan per chunk (the historical accumulation
+        scheme), re-deriving the production stream contract and every
+        law from scratch."""
         c = memsim.stack_channels(configs)
         n = int(c.rho.shape[0])
         # Derived terms spelled out verbatim (NOT via memsim helpers), so
@@ -47,6 +49,7 @@ class TestTimestepMicroOpt:
         sn, xb = c.stall_ns, c.stall_break_ns
         a1, a2, cap = c.stall_alpha, c.stall_alpha2, c.stall_max_ns
         q_b = (sn / xb) ** a1
+        p_stall = jnp.clip(c.stall_prob * c.eta, 0.0, 0.999)
 
         def pareto_seg(ratio, a):
             d = a - 1.0
@@ -57,43 +60,66 @@ class TestTimestepMicroOpt:
 
         stall_mean = (sn + sn * pareto_seg(sn / xb, a1) +
                       q_b * xb * pareto_seg(xb / cap, a2))
-        s_small = ((c.t_xfer_ns - c.stall_prob * stall_mean) /
-                   (1.0 - c.stall_prob))
+        s_small = ((c.t_xfer_ns - p_stall * stall_mean) /
+                   (1.0 - p_stall))
         s_small = jnp.maximum(s_small, memsim.MIN_SERVICE_NS)
+        bound = c.outstanding * c.t_xfer_ns
+        lat0 = c.service_ns + 2.0 + c.cxl_lat_ns
 
-        def step(carry, xs):
-            key, rec = xs
-            backlog, in_burst, hist = carry
+        # The stream contract, re-derived: one chunk key per emission
+        # chunk (split from the seed), ONE threefry stream per lane
+        # (fold_in of the lane index), five uniforms per step per lane.
+        chunk = memsim._ts_chunk_len(n)
+        n_chunks = -(-steps // chunk)
+        ckeys = jax.random.split(jax.random.PRNGKey(seed), n_chunks)
+        record = np.zeros(n_chunks * chunk, np.float32)
+        record[warmup:steps] = 1.0
+
+        @jax.jit
+        def run_chunk(state, key, rec):
+            lanes = jnp.arange(n, dtype=jnp.int32)
+            lane_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(lanes)
+            u5 = jax.vmap(lambda k: jax.random.uniform(k, (chunk, 5))
+                          )(lane_keys)
             switch_u, arrive_u, jitter_u, svc_u, size_u = \
-                jax.random.uniform(key, (5, n))
-            in_burst = jnp.where(
-                in_burst > 0.5,
-                jnp.where(switch_u < p_leave, 0.0, 1.0),
-                jnp.where(switch_u < p_enter, 1.0, 0.0))
-            rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
-            arrive = (arrive_u < rate).astype(jnp.float32)
-            arrive = arrive * (backlog <= c.outstanding * c.t_xfer_ns
-                               ).astype(jnp.float32)
-            jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns
-            latency = (backlog + c.service_ns + 2.0 + jitter
-                       + c.cxl_lat_ns)
-            bin_idx = jnp.clip((latency / memsim.BIN_NS).astype(jnp.int32),
-                               0, memsim.N_BINS - 1)
-            hist = hist.at[jnp.arange(n), bin_idx].add(arrive * rec)
+                jnp.moveaxis(u5, -1, 0)                 # each (n, chunk)
+            jitter = (jitter_u * 2.0 - 1.0) * c.service_jitter_ns[:, None]
             u = jnp.maximum(size_u, 1e-7)
-            stall = jnp.where(u > q_b, sn * u ** (-1.0 / a1),
-                              xb * (q_b / u) ** (1.0 / a2))
-            stall = jnp.minimum(stall, cap)
-            svc = jnp.where(svc_u < c.stall_prob, stall, s_small)
-            backlog = jnp.maximum(backlog + arrive * svc - 1.0, 0.0)
-            return (backlog, in_burst, hist), None
+            stall = jnp.where(u > q_b[:, None],
+                              sn[:, None] * u ** (-1.0 / a1[:, None]),
+                              xb[:, None] * (q_b[:, None] / u)
+                              ** (1.0 / a2[:, None]))
+            stall = jnp.minimum(stall, cap[:, None])
+            svc = jnp.where(svc_u < p_stall[:, None], stall,
+                            s_small[:, None])
 
-        keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-        record = (jnp.arange(steps) >= warmup).astype(jnp.float32)
-        init = (jnp.zeros(n), jnp.ones(n),
-                jnp.zeros((n, memsim.N_BINS)))
-        (_, _, hist), _ = jax.lax.scan(step, init, (keys, record))
-        return np.asarray(hist, np.float64)
+            def step(carry, xs):
+                sw, au, jit_ns, s, rec1 = xs
+                backlog, in_burst, hist = carry
+                in_burst = jnp.where(
+                    in_burst > 0.5,
+                    jnp.where(sw < p_leave, 0.0, 1.0),
+                    jnp.where(sw < p_enter, 1.0, 0.0))
+                rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
+                arrive = (au < rate).astype(jnp.float32)
+                arrive = arrive * (backlog <= bound).astype(jnp.float32)
+                latency = backlog + lat0 + jit_ns
+                bin_idx = jnp.clip(
+                    (latency / memsim.BIN_NS).astype(jnp.int32),
+                    0, memsim.N_BINS - 1)
+                hist = hist.at[jnp.arange(n), bin_idx].add(arrive * rec1)
+                backlog = jnp.maximum(backlog + arrive * s - 1.0, 0.0)
+                return (backlog, in_burst, hist), None
+
+            return jax.lax.scan(
+                step, state,
+                (switch_u.T, arrive_u.T, jitter.T, svc.T, rec))[0]
+
+        state = (jnp.zeros(n), jnp.ones(n), jnp.zeros((n, memsim.N_BINS)))
+        for k in range(n_chunks):
+            state = run_chunk(state, ckeys[k],
+                              jnp.asarray(record[k * chunk:(k + 1) * chunk]))
+        return np.asarray(state[2], np.float64)
 
     def test_before_after_histograms_bit_identical(self):
         configs = [ChannelConfig(rho=0.35),

@@ -41,21 +41,52 @@ class TestQueueLUT:
     def test_tables_finite_and_shaped(self, lut):
         shape = (len(queuelut.DEFAULT_RHO_GRID),
                  len(queuelut.DEFAULT_KAPPA_GRID),
-                 len(queuelut.DEFAULT_OUTSTANDING_GRID))
+                 len(queuelut.DEFAULT_OUTSTANDING_GRID),
+                 len(queuelut.DEFAULT_ETA_GRID))
         for t in (lut.wait_ns, lut.p90_wait_ns, lut.sigma_ns):
             assert t.shape == shape
             assert np.isfinite(np.asarray(t)).all()
             assert (np.asarray(t) >= 0.0).all()
 
     def test_grid_nodes_are_exact(self, lut):
-        i, j, k = 3, 1, 4
+        i, j, k, m = 3, 1, 4, 2
         got = lut.lookup(float(lut.rho_grid[i]),
                          float(lut.kappa_grid[j]),
-                         float(lut.outstanding_grid[k]))
+                         float(lut.outstanding_grid[k]),
+                         float(lut.eta_grid[m]))
         for val, table in zip(got, (lut.wait_ns, lut.p90_wait_ns,
                                     lut.sigma_ns)):
-            assert float(val) == pytest.approx(float(table[i, j, k]),
+            assert float(val) == pytest.approx(float(table[i, j, k, m]),
                                                rel=1e-6)
+
+    def test_outstanding_interpolates_in_log_space(self, lut):
+        # The outstanding axis is log-spaced: the geometric mean of two
+        # adjacent grid nodes must read back as the arithmetic mean of
+        # the two node values (fraction 1/2 in log space).
+        k = 2
+        lo = float(lut.outstanding_grid[k])
+        hi = float(lut.outstanding_grid[k + 1])
+        x = float(np.sqrt(lo * hi))
+        got = float(lut.wait(float(lut.rho_grid[3]),
+                             float(lut.kappa_grid[1]), x,
+                             float(lut.eta_grid[-1])))
+        tab = np.asarray(lut.wait_ns)
+        want = 0.5 * (tab[3, 1, k, -1] + tab[3, 1, k + 1, -1])
+        assert got == pytest.approx(float(want), rel=1e-6)
+
+    def test_eta_axis_brackets_off_grid_reads(self, lut):
+        # An off-grid eta read is a convex blend of its two neighbours.
+        m = 1
+        lo = float(lut.eta_grid[m])
+        hi = float(lut.eta_grid[m + 1])
+        mid = 0.5 * (lo + hi)
+        tab = np.asarray(lut.wait_ns)
+        a = float(tab[3, 1, 4, m])
+        b = float(tab[3, 1, 4, m + 1])
+        got = float(lut.wait(float(lut.rho_grid[3]),
+                             float(lut.kappa_grid[1]),
+                             float(lut.outstanding_grid[4]), mid))
+        assert min(a, b) - 1e-9 <= got <= max(a, b) + 1e-9
 
     def test_interpolation_matches_direct_des_off_grid(self, lut):
         # (rho, kappa) strictly between grid nodes; the LUT's multilinear
@@ -75,7 +106,7 @@ class TestQueueLUT:
         assert lut_wait == pytest.approx(des_wait, rel=0.35, abs=4.0)
 
     def test_wait_monotone_in_rho_at_high_outstanding(self, lut):
-        col = np.asarray(lut.wait_ns)[:, 0, -1]
+        col = np.asarray(lut.wait_ns)[:, 0, -1, -1]
         assert col[-1] > col[0]
         # Not strictly per-segment (DES noise), but the top-of-grid wait
         # dominates the bottom by a wide margin.
