@@ -4,7 +4,7 @@ COAXIAL's Fig-2a argument on TPU: spreading a 32k-token KV cache over N
 chips' HBM vs paying the flash-decode combine premium.  Derived column:
 predicted decode-step speedup at the planner's chosen channel count."""
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, emit_derived, time_call
 from repro.configs import get_config
 from repro.core import planner
 
@@ -27,11 +27,11 @@ def main():
                                  kv_bytes=kb, qkv_flops=qf,
                                  combine_bytes=cb), iters=1)
         emit(f"channelized.{arch}.n_channels", us, plan.n_channels)
-        emit(f"channelized.{arch}.speedup", 0.0, f"{plan.speedup:.2f}")
-        emit(f"channelized.{arch}.baseline_us", 0.0,
-             f"{plan.baseline.total_s * 1e6:.1f}")
-        emit(f"channelized.{arch}.step_us", 0.0,
-             f"{plan.cost.total_s * 1e6:.1f}")
+        emit_derived(f"channelized.{arch}.speedup", f"{plan.speedup:.2f}")
+        emit_derived(f"channelized.{arch}.baseline_us",
+                     f"{plan.baseline.total_s * 1e6:.1f}")
+        emit_derived(f"channelized.{arch}.step_us",
+                     f"{plan.cost.total_s * 1e6:.1f}")
 
 
 if __name__ == "__main__":

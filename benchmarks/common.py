@@ -92,6 +92,18 @@ def time_call(fn, *args, warmup=1, iters=3):
 
 
 def emit(name, us, derived):
-    print(f"{name},{us:.1f},{derived}")
+    """One CSV row.  ``us=None`` marks a derived (non-timed) row: the
+    timing field is left EMPTY in the CSV and null in the bench JSON,
+    so the trajectory diff never mistakes "not timed" for "0.0 us"."""
+    if us is None:
+        print(f"{name},,{derived}")
+    else:
+        print(f"{name},{us:.1f},{derived}")
     if ROWS is not None:
-        ROWS.append((str(name), float(us), str(derived)))
+        ROWS.append((str(name), None if us is None else float(us),
+                     str(derived)))
+
+
+def emit_derived(name, derived):
+    """Emit a row that carries a derived quantity but no timing."""
+    emit(name, None, derived)

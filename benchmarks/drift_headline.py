@@ -21,13 +21,17 @@ engine) unless ``REPRO_DES_ENGINE`` overrides it.
 
 import numpy as np
 
-from benchmarks.common import des_budget, des_engine, emit, time_call
-from repro.core import coaxial, cpu_model, hw, queuelut
-from repro.core.workloads import NAMES
+from benchmarks.common import des_budget, des_engine, emit, emit_derived, \
+    time_call
+from repro.core import coaxial, cpu_model, devices, hw, queuelut, workloads
 
 
 def drift_sweep() -> "coaxial.SweepResult":
-    """Designs x (default, pessimistic) latency x both queue backends."""
+    """Designs x (default, pessimistic) latency x both queue backends.
+
+    Solves whatever is REGISTERED -- ``main`` registers the measured
+    2303.15375 device points and the derived LLM serving workload first,
+    so each gets its own drift row beside the idealized Table-2 set."""
     lut = queuelut.default_queue_lut(
         steps=des_budget(queuelut.DEFAULT_STEPS),
         engine=des_engine(queuelut.DEFAULT_ENGINE))
@@ -35,7 +39,8 @@ def drift_sweep() -> "coaxial.SweepResult":
         design=coaxial.all_designs(),
         iface_lat_ns=(None, hw.CXL_LAT_PESSIMISTIC_NS),
         queue_model=cpu_model.QUEUE_MODELS)
-    return coaxial.solve_spec(spec, lut=lut)
+    return coaxial.solve_spec(spec, workloads=workloads.all_workloads(),
+                              lut=lut)
 
 
 def drift_rows(sw) -> list[dict]:
@@ -67,9 +72,13 @@ def drift_rows(sw) -> list[dict]:
     # Fig 5 extremes: the best-case streaming kernel and the regression
     # canary.
     c4 = cmp(coaxial.COAXIAL_4X)
-    for wname in ("lbm", "stream-copy"):
-        i = NAMES.index(wname)
-        add(f"fig5.{wname}.speedup",
+    extremes = ("lbm", "stream-copy")
+    # ... plus any registered LLM serving workload (repro.serving).
+    llm = tuple(n for n in sw.names if n.startswith("llm-"))
+    for wname in extremes + llm:
+        i = sw.names.index(wname)
+        prefix = "serving" if wname in llm else "fig5"
+        add(f"{prefix}.{wname}.speedup",
             c4["closed_form"].speedup[i], c4["memsim"].speedup[i])
     # Table 5: EDP ratio, re-derived per backend from its own comparison.
     add("table5.edp_ratio",
@@ -81,11 +90,21 @@ def drift_rows(sw) -> list[dict]:
 
 
 def main():
-    us, sw = time_call(drift_sweep, warmup=0, iters=1)
-    emit("drift.cells", us, int(np.prod(sw.shape)))
-    for r in drift_rows(sw):
-        emit(f"drift.{r['metric']}", 0.0,
-             f"{r['closed']:.3f}|{r['memsim']:.3f}|{r['drift_pct']:+.1f}%")
+    from repro.serving.demand import (register_llm_workloads,
+                                      unregister_llm_workloads)
+    devices.register_measured_devices()
+    llm = register_llm_workloads(("mistral-large-123b",))
+    try:
+        us, sw = time_call(drift_sweep, warmup=0, iters=1)
+        emit("drift.cells", us, int(np.prod(sw.shape)))
+        for r in drift_rows(sw):
+            emit_derived(
+                f"drift.{r['metric']}",
+                f"{r['closed']:.3f}|{r['memsim']:.3f}|"
+                f"{r['drift_pct']:+.1f}%")
+    finally:
+        devices.unregister_measured_devices()
+        unregister_llm_workloads(llm)
 
 
 if __name__ == "__main__":

@@ -145,6 +145,32 @@ def pareto_table() -> str:
     return "\n".join(lines)
 
 
+def serving_table(arch: str = "stablelm-1.6b",
+                  slo_p99_ms: float = 500.0) -> str:
+    """Every capacity-planner verdict for one serving scenario, the
+    SLO-meeting minimum-area pick flagged -- the repro.serving answer."""
+    from repro.serving import capacity, traffic
+    trace = traffic.synthetic_diurnal(n_epochs=4)
+    plan = capacity.plan_capacity((arch,), trace, slo_p99_ms=slo_p99_ms,
+                                  peak_util=0.65)
+    lines = [f"Scenario: {arch} @ batch {plan.batch} / context "
+             f"{plan.context}, trace `{plan.trace}`, SLO p99 <= "
+             f"{plan.slo_p99_ms:g} ms ({plan.engine} engine, "
+             f"{plan.steps} ns/cell)", "",
+             "| design | tier split | rel area | rel pins | peak rho | "
+             "access p99 ns | token p99 ms | SLO | |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    best = plan.best
+    for v in plan.verdicts:
+        mark = "pick" if best is not None and v.name == best.name else ""
+        lines.append(
+            f"| {v.name} | {v.tier_split:g} | {v.rel_area:.3f} | "
+            f"{v.rel_pins:.3f} | {v.peak_rho:.2f} | "
+            f"{v.access_p99_ns:.0f} | {v.token_p99_ms:.1f} | "
+            f"{'ok' if v.meets_slo else 'no'} | {mark} |")
+    return "\n".join(lines)
+
+
 def _load_bench_points(bench_dir=None) -> list:
     """All ``BENCH_*.json`` trajectory points, oldest first (mtime)."""
     import glob
@@ -231,7 +257,7 @@ def main():
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "coaxial",
-                             "pareto", "drift", "bench"])
+                             "pareto", "drift", "serving", "bench"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
     args = ap.parse_args()
@@ -257,6 +283,10 @@ def main():
     if args.section in ("all", "drift"):
         print("### Closed form vs mechanism (headline drift)\n")
         print(drift_table())
+        print()
+    if args.section in ("all", "serving"):
+        print("### Serving capacity plan\n")
+        print(serving_table())
         print()
     if args.section in ("all", "bench"):
         print("### Benchmark trajectory (BENCH_<rev>.json diff)\n")

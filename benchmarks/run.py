@@ -36,6 +36,7 @@ MODULES = [
     "benchmarks.sweep_grid",
     "benchmarks.pareto_frontier",
     "benchmarks.drift_headline",
+    "benchmarks.serving_capacity",
     "benchmarks.memsim_speed",
     "benchmarks.stream_kernels",
     "benchmarks.channelized_decode",

@@ -1,0 +1,46 @@
+"""The serving capacity planner as a benchmark section (repro.serving).
+
+Runs one end-to-end plan -- a memory-bound arch against the synthetic
+diurnal trace, every candidate (registry + generated CXL grid + measured
+2303.15375 devices, with tier splits) -- and emits the planner's answer
+plus the headline of the serving story: DDR baseline vs best-pick p99
+token latency.  The DES side honors ``REPRO_DES_STEPS`` /
+``REPRO_DES_ENGINE`` like every other DES-backed section, so CI smoke
+runs the full pipeline cheaply.
+"""
+
+from benchmarks.common import des_budget, des_engine, emit, emit_derived, \
+    time_call
+from repro.serving import capacity, traffic
+
+#: Small-model serving point: memory-bound, so the design choice is
+#: decided by the queue mechanism rather than the compute floor.
+ARCH = "stablelm-1.6b"
+SLO_MS = 500.0
+
+
+def main():
+    engine = des_engine("event")
+    steps = des_budget(capacity.DEFAULT_STEPS, engine)
+    trace = traffic.synthetic_diurnal(n_epochs=4)
+    us, plan = time_call(
+        lambda: capacity.plan_capacity(
+            (ARCH,), trace, slo_p99_ms=SLO_MS, peak_util=0.65,
+            steps=steps, engine=engine),
+        warmup=0, iters=1)
+    emit("serving.plan_capacity", us, len(plan.verdicts))
+    best = plan.best or plan.closest
+    baseline = next(v for v in plan.verdicts if v.design == "ddr-baseline")
+    emit_derived("serving.arch", ARCH)
+    emit_derived("serving.best.design", best.name)
+    emit_derived("serving.best.rel_area", f"{best.rel_area:.3f}")
+    emit_derived("serving.best.token_p99_ms", f"{best.token_p99_ms:.1f}")
+    emit_derived("serving.ddr-baseline.token_p99_ms",
+                 f"{baseline.token_p99_ms:.1f}")
+    emit_derived("serving.p99_speedup_vs_ddr",
+                 f"{baseline.token_p99_ms / best.token_p99_ms:.2f}")
+    emit_derived("serving.meets_slo", int(plan.best is not None))
+
+
+if __name__ == "__main__":
+    main()

@@ -145,15 +145,55 @@ SUITES = tuple(sorted({w.suite for w in WORKLOADS}))
 SWEEPABLE_FIELDS = ("ipc", "mpki", "wb", "kappa", "eta", "exec_frac",
                     "gamma", "pf_boost", "ws_mb")
 
-_BY_NAME: dict[str, "Workload"] = {w.name: w for w in WORKLOADS}
+# ---------------------------------------------------------------------------
+# Workload registry.  Seeded with the paper's Table-4 workloads; derived
+# workloads (e.g. repro.serving's LLM-decode demand vectors) register at
+# runtime and flow into every registry-backed sweep, exactly like
+# coaxial's design registry.  ``WORKLOADS`` stays the immutable Table-4
+# calibration set; ``all_workloads()`` is the live view.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, "Workload"] = {w.name: w for w in WORKLOADS}
+
+
+def _registry_changed():
+    """Invalidate caches keyed on the registry (lazy import: coaxial
+    imports this module)."""
+    import sys
+    coaxial = sys.modules.get("repro.core.coaxial")
+    if coaxial is not None:
+        coaxial.default_sweep.cache_clear()
+
+
+def register_workload(w: Workload, *, overwrite: bool = False) -> Workload:
+    """Add a workload to the registry (and to every future registry-backed
+    sweep).  Table-4 names may not be shadowed unless ``overwrite``."""
+    if not overwrite and w.name in _REGISTRY:
+        raise ValueError(f"workload {w.name!r} already registered")
+    _REGISTRY[w.name] = w
+    _registry_changed()
+    return w
+
+
+def unregister_workload(name: str) -> Workload:
+    """Remove a registered workload (Table-4 seeds may be removed too;
+    re-import the module to restore them)."""
+    w = _REGISTRY.pop(name)
+    _registry_changed()
+    return w
+
+
+def all_workloads() -> tuple[Workload, ...]:
+    """All registered workloads, registration-ordered (Table 4 first)."""
+    return tuple(_REGISTRY.values())
 
 
 def by_name(name: str) -> Workload:
     try:
-        return _BY_NAME[name]
+        return _REGISTRY[name]
     except KeyError:
         raise KeyError(f"unknown workload {name!r}; "
-                       f"known: {sorted(_BY_NAME)}") from None
+                       f"known: {sorted(_REGISTRY)}") from None
 
 
 @dataclasses.dataclass(frozen=True)
