@@ -90,11 +90,14 @@ def drift_rows(sw) -> list[dict]:
 
 
 def main():
-    from repro.serving.demand import (register_llm_workloads,
-                                      unregister_llm_workloads)
-    devices.register_measured_devices()
-    llm = register_llm_workloads(("mistral-large-123b",))
-    try:
+    from repro.serving.demand import register_llm_workloads
+
+    # scoped_registry snapshots BOTH registries and restores on exit
+    # (invalidating the default_sweep cache), so repeated invocations --
+    # and whatever runs after this section -- solve the same grid.
+    with coaxial.scoped_registry():
+        devices.register_measured_devices()
+        register_llm_workloads(("mistral-large-123b",))
         us, sw = time_call(drift_sweep, warmup=0, iters=1)
         emit("drift.cells", us, int(np.prod(sw.shape)))
         for r in drift_rows(sw):
@@ -102,9 +105,6 @@ def main():
                 f"drift.{r['metric']}",
                 f"{r['closed']:.3f}|{r['memsim']:.3f}|"
                 f"{r['drift_pct']:+.1f}%")
-    finally:
-        devices.unregister_measured_devices()
-        unregister_llm_workloads(llm)
 
 
 if __name__ == "__main__":

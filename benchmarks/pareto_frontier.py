@@ -37,16 +37,12 @@ def frontier_sweep() -> "coaxial.SweepResult":
 
 
 def knee_point(frontier, *, cost: str = "rel_area") -> dict:
-    """Frontier point farthest (perpendicular) from the endpoint chord."""
-    if len(frontier) <= 2:
-        return frontier[-1]
-    xy = np.array([[p[cost], p["geomean_speedup"]] for p in frontier])
-    a, b = xy[0], xy[-1]
-    chord = b - a
-    chord = chord / np.linalg.norm(chord)
-    rel = xy - a
-    dist = np.abs(rel[:, 0] * chord[1] - rel[:, 1] * chord[0])
-    return frontier[int(np.argmax(dist))]
+    """Frontier point farthest (perpendicular) from the endpoint chord.
+
+    Kept as a shim: the implementation moved to ``coaxial.knee_point``
+    so library code (``repro.core.designer``) can use it too.
+    """
+    return coaxial.knee_point(frontier, cost=cost)
 
 
 def main():

@@ -200,7 +200,13 @@ def bench_diff_table(bench_dir=None) -> str:
                "benchmarks.run` to start the trajectory)"
     name_cur, cur = pts[-1]
     name_prev, prev = pts[-2] if len(pts) > 1 else (None, None)
-    lines = [f"Current: `{name_cur}` (rev {cur['rev']}, "
+    lines = []
+    if prev is None:
+        lines.append("(only one BENCH_*.json point -- nothing to diff "
+                     "against yet; showing the snapshot. A second "
+                     "`python -m benchmarks.run` starts the trajectory.)")
+        lines.append("")
+    lines += [f"Current: `{name_cur}` (rev {cur['rev']}, "
              f"{cur['env']['devices']} device(s), "
              f"{cur['totals']['seconds']:.1f}s, "
              f"{cur['totals']['failures']} failure(s))"]

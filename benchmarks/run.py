@@ -5,8 +5,10 @@ Pallas kernels, the beyond-paper channelized-decode planner study, and the
 roofline table derived from the dry-run artifacts.
 
 Every run also writes a versioned ``BENCH_<rev>.json`` trajectory point
-under ``benchmarks/results/bench/`` (override with ``--bench-json``,
-disable with ``--no-bench-json``): per-section wall-clock, emitted-row and
+at the repo root (override with ``--bench-json``, disable with
+``--no-bench-json``); dirty working trees get ``BENCH_<rev>-dirty<n>``
+suffixes so iterating locally accumulates points instead of clobbering
+one: per-section wall-clock, emitted-row and
 DES jit-trace counts, every CSV row, and the environment knobs that shaped
 the run (device count, ``REPRO_DES_STEPS``/``_ENGINE``/``_DEVICES``,
 compile-cache dir).  ``report.py --section bench`` diffs the newest two
@@ -37,15 +39,18 @@ MODULES = [
     "benchmarks.pareto_frontier",
     "benchmarks.drift_headline",
     "benchmarks.serving_capacity",
+    "benchmarks.designer_opt",
     "benchmarks.memsim_speed",
     "benchmarks.stream_kernels",
     "benchmarks.channelized_decode",
     "benchmarks.roofline",
 ]
 
-#: Default home of the ``BENCH_<rev>.json`` history.
-BENCH_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                         "results", "bench")
+#: Default home of the ``BENCH_<rev>.json`` history: the repo root, so
+#: trajectory points are committed alongside the code they measure
+#: (``benchmarks/results/`` was never checked in, so the history always
+#: started empty there).
+BENCH_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def git_rev() -> str:
@@ -59,11 +64,34 @@ def git_rev() -> str:
         return "nogit"
 
 
-def bench_path(where: str, rev: str) -> str:
-    """Resolve ``--bench-json`` (a dir or a ``.json`` path) to a file."""
+def git_dirty() -> bool:
+    """True when the working tree differs from HEAD."""
+    try:
+        out = subprocess.run(["git", "status", "--porcelain"],
+                             capture_output=True, text=True, check=True,
+                             cwd=os.path.dirname(os.path.abspath(__file__)))
+        return bool(out.stdout.strip())
+    except Exception:       # noqa: BLE001 -- any git failure means clean
+        return False
+
+
+def bench_path(where: str, rev: str, dirty: bool = False) -> str:
+    """Resolve ``--bench-json`` (a dir or a ``.json`` path) to a file.
+
+    A clean rev maps to ``BENCH_<rev>.json`` (re-running the same
+    commit legitimately refreshes its point); a dirty tree gets the
+    first free ``BENCH_<rev>-dirty<n>.json`` so successive local edits
+    accumulate trajectory points instead of overwriting one.
+    """
     if where.endswith(".json"):
         return where
-    return os.path.join(where, f"BENCH_{rev}.json")
+    if not dirty:
+        return os.path.join(where, f"BENCH_{rev}.json")
+    n = 1
+    while os.path.exists(os.path.join(where,
+                                      f"BENCH_{rev}-dirty{n}.json")):
+        n += 1
+    return os.path.join(where, f"BENCH_{rev}-dirty{n}.json")
 
 
 def main(argv=None) -> None:
@@ -123,6 +151,10 @@ def main(argv=None) -> None:
 
     if not args.no_bench_json:
         rev = git_rev()
+        path = bench_path(args.bench_json, rev, dirty=git_dirty())
+        base = os.path.basename(path)
+        if base.startswith("BENCH_") and base.endswith(".json"):
+            rev = base[len("BENCH_"):-len(".json")]
         point = dict(
             rev=rev,
             unix_time=int(time.time()),
@@ -139,7 +171,6 @@ def main(argv=None) -> None:
                                 for e in memsim.ENGINES}),
             sections=sections,
             rows=all_rows)
-        path = bench_path(args.bench_json, rev)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
             json.dump(point, f, indent=1)

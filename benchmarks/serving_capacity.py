@@ -11,6 +11,7 @@ runs the full pipeline cheaply.
 
 from benchmarks.common import des_budget, des_engine, emit, emit_derived, \
     time_call
+from repro.core import coaxial
 from repro.serving import capacity, traffic
 
 #: Small-model serving point: memory-bound, so the design choice is
@@ -23,11 +24,15 @@ def main():
     engine = des_engine("event")
     steps = des_budget(capacity.DEFAULT_STEPS, engine)
     trace = traffic.synthetic_diurnal(n_epochs=4)
-    us, plan = time_call(
-        lambda: capacity.plan_capacity(
-            (ARCH,), trace, slo_p99_ms=SLO_MS, peak_util=0.65,
-            steps=steps, engine=engine),
-        warmup=0, iters=1)
+    # The plan reads the design registry (include_registry=True);
+    # scoped_registry guarantees this section leaves it exactly as
+    # found even if a future candidate generator registers points.
+    with coaxial.scoped_registry():
+        us, plan = time_call(
+            lambda: capacity.plan_capacity(
+                (ARCH,), trace, slo_p99_ms=SLO_MS, peak_util=0.65,
+                steps=steps, engine=engine),
+            warmup=0, iters=1)
     emit("serving.plan_capacity", us, len(plan.verdicts))
     best = plan.best or plan.closest
     baseline = next(v for v in plan.verdicts if v.design == "ddr-baseline")

@@ -35,6 +35,7 @@ design optimization.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 
@@ -62,7 +63,8 @@ __all__ = [
     "DESIGNS", "MemSystem", "evaluate", "Comparison", "SweepResult", "sweep",
     "Axis", "SweepSpec", "sweep_spec", "solve_spec", "design_gradient",
     "default_sweep", "register_design", "unregister_design", "get_design",
-    "all_designs", "area_report", "pin_report", "design_cost", "edp_report",
+    "all_designs", "scoped_registry", "knee_point",
+    "area_report", "pin_report", "design_cost", "edp_report",
     "sensitivity_latency", "sensitivity_cores", "ChannelConfig",
     "LatencyStats", "DistributionSweepResult", "distribution_spec",
     "distribution_sweep", "validate_calibration", "crosscheck_engines",
@@ -80,9 +82,20 @@ _REGISTRY: dict[str, MemSystem] = {}
 
 
 def register_design(sys: MemSystem, *, overwrite: bool = False) -> MemSystem:
-    """Add a design point to the registry (and to every future sweep)."""
-    if not overwrite and sys.name in _REGISTRY:
-        raise ValueError(f"design {sys.name!r} already registered")
+    """Add a design point to the registry (and to every future sweep).
+
+    Re-registering the SAME design is an idempotent no-op (the existing
+    entry is returned and the sweep cache is left warm); only a
+    *different* design under an existing name raises without
+    ``overwrite`` -- that is the silent-shadowing case worth refusing.
+    """
+    prev = _REGISTRY.get(sys.name)
+    if prev is not None:
+        if prev == sys:
+            return prev
+        if not overwrite:
+            raise ValueError(f"design {sys.name!r} already registered "
+                             f"with different parameters")
     _REGISTRY[sys.name] = sys
     default_sweep.cache_clear()
     return sys
@@ -113,6 +126,34 @@ def all_designs() -> tuple[MemSystem, ...]:
 for _d in DESIGNS:
     _REGISTRY[_d.name] = _d
 del _d
+
+
+@contextlib.contextmanager
+def scoped_registry():
+    """Snapshot both runtime registries; restore them on exit.
+
+    Guards the design registry (this module) and the workload registry
+    (:mod:`repro.core.workloads`) against mutation leaks: anything
+    registered inside the ``with`` block -- measured devices, LLM
+    workloads, planner candidates -- is rolled back afterwards, and the
+    :func:`default_sweep` cache is invalidated iff the registries
+    actually changed, so later sweeps solve exactly the pre-block world.
+    Reentrant and exception-safe (restore runs in a ``finally``).
+    """
+    from repro.core import workloads as _workloads
+    designs = dict(_REGISTRY)
+    wls = dict(_workloads._REGISTRY)
+    try:
+        yield
+    finally:
+        changed = (_REGISTRY != designs
+                   or _workloads._REGISTRY != wls)
+        _REGISTRY.clear()
+        _REGISTRY.update(designs)
+        _workloads._REGISTRY.clear()
+        _workloads._REGISTRY.update(wls)
+        if changed:
+            default_sweep.cache_clear()
 
 
 @dataclasses.dataclass
@@ -501,7 +542,30 @@ class SweepResult(_NamedAxes):
         return design_cost(eff["dram_channels"], eff["links"],
                            eff["llc_mb_per_core"])
 
-    def pareto(self, *, cost: str = "rel_area") -> list[dict]:
+    def p99_grid(self) -> np.ndarray:
+        """Worst-workload p99 LLC-miss latency per cell (ns).
+
+        Max (not geomean) across the workload axis: the tail story is a
+        guarantee, so the slowest workload's p99 is the cell's p99.  All
+        NaN unless the grid was solved under ``queue_model="memsim"``
+        (the closed form has no tail law).
+        """
+        return np.max(self.results.latency_p99_ns, axis=-1)
+
+    def _cell_point(self, cell, flat_costs, gm) -> dict:
+        """Named coordinates + cost/speedup payload for one flat cell."""
+        idx = np.unravel_index(cell, self.shape)
+        point = {ax.name: ax.coords[0] for ax in self.pinned}
+        point.update({ax.name: ax.coords[i]
+                      for ax, i in zip(self.axes, idx)})
+        point.update(
+            rel_area=float(flat_costs["rel_area"][cell]),
+            rel_pins=float(flat_costs["rel_pins"][cell]),
+            geomean_speedup=float(gm[cell]))
+        return point
+
+    def pareto(self, *, cost: str = "rel_area",
+               tail: bool = False) -> list[dict]:
         """The non-dominated (min cost, max geomean speedup) frontier over
         every grid cell.
 
@@ -511,6 +575,16 @@ class SweepResult(_NamedAxes):
         each a dict of the cell's named coordinates plus ``rel_area``,
         ``rel_pins`` and ``geomean_speedup`` (vs the un-overridden
         baseline).
+
+        ``tail=True`` ranks by ``(cost, mean speedup, p99)`` instead: a
+        cell survives unless some other cell is at least as good on ALL
+        of (min cost, max geomean speedup, min worst-workload p99) and
+        strictly better on one -- so a design that pays a little area to
+        cut the tail stays on the frontier even when a cheaper point
+        matches its mean.  Each point then also carries
+        ``latency_p99_ns`` (from :meth:`p99_grid`).  Requires a
+        ``queue_model="memsim"`` solve; raises otherwise (the closed
+        form's tail is NaN).
 
         Example::
 
@@ -531,22 +605,64 @@ class SweepResult(_NamedAxes):
                              f"got {cost!r}")
         gm = self.speedup_grid().reshape(-1)
         flat_costs = {k: v.reshape(-1) for k, v in costs.items()}
+        if tail:
+            return self._pareto_tail(cost, flat_costs, gm)
         order = np.lexsort((-gm, flat_costs[cost]))
         frontier, best = [], -np.inf
         for cell in order:
             if gm[cell] <= best + 1e-12:
                 continue
             best = gm[cell]
-            idx = np.unravel_index(cell, self.shape)
-            point = {ax.name: ax.coords[0] for ax in self.pinned}
-            point.update({ax.name: ax.coords[i]
-                          for ax, i in zip(self.axes, idx)})
-            point.update(
-                rel_area=float(flat_costs["rel_area"][cell]),
-                rel_pins=float(flat_costs["rel_pins"][cell]),
-                geomean_speedup=float(gm[cell]))
+            frontier.append(self._cell_point(cell, flat_costs, gm))
+        return frontier
+
+    def _pareto_tail(self, cost, flat_costs, gm) -> list[dict]:
+        """3-objective (min cost, max speedup, min p99) non-dominated
+        filter behind ``pareto(tail=True)``."""
+        p99 = self.p99_grid().reshape(-1)
+        if np.all(np.isnan(p99)):
+            raise ValueError(
+                "pareto(tail=True) needs p99 latencies; solve the sweep "
+                "under queue_model='memsim' (the closed form has no tail "
+                "law)")
+        c = flat_costs[cost]
+        eps = 1e-12
+        frontier, seen = [], set()
+        for cell in np.lexsort((p99, -gm, c)):
+            dominated = np.any((c <= c[cell] + eps)
+                               & (gm >= gm[cell] - eps)
+                               & (p99 <= p99[cell] + eps)
+                               & ((c < c[cell] - eps)
+                                  | (gm > gm[cell] + eps)
+                                  | (p99 < p99[cell] - eps)))
+            key = (round(float(c[cell]), 12), round(float(gm[cell]), 12),
+                   round(float(p99[cell]), 9))
+            if dominated or key in seen:
+                continue
+            seen.add(key)
+            point = self._cell_point(cell, flat_costs, gm)
+            point["latency_p99_ns"] = float(p99[cell])
             frontier.append(point)
         return frontier
+
+
+def knee_point(frontier, *, cost: str = "rel_area") -> dict:
+    """Frontier point farthest (perpendicular) from the endpoint chord.
+
+    The "buy this one" design of a cost-vs-speedup frontier (as returned
+    by :meth:`SweepResult.pareto`): beyond the knee, each extra unit of
+    ``cost`` buys visibly less speedup.  Degenerate frontiers (<= 2
+    points) return the last (max-speedup) point.
+    """
+    if len(frontier) <= 2:
+        return frontier[-1]
+    xy = np.array([[p[cost], p["geomean_speedup"]] for p in frontier])
+    a, b = xy[0], xy[-1]
+    chord = b - a
+    chord = chord / np.linalg.norm(chord)
+    rel = xy - a
+    dist = np.abs(rel[:, 0] * chord[1] - rel[:, 1] * chord[0])
+    return frontier[int(np.argmax(dist))]
 
 
 def solve_spec(spec: SweepSpec, *, workloads=WORKLOADS,

@@ -53,6 +53,16 @@ a pytree operand (``lut=None`` selects the closed form), so the
 pytree-structure difference keys the jit cache -- each backend still
 costs ONE trace per flattened cell count, and ``design_gradient``
 differentiates straight through the table.
+
+Tail path: on the memsim backend the LUT also carries the DES-measured
+p99 queue wait, and the solver threads a differentiable per-workload
+``latency_p99_ns`` / ``cpi_mem_p99`` alongside the mean-based fixed
+point (the p99 latency at the CONVERGED operating point; it does not
+feed the fixed point itself, which stays mean + gamma*sigma).  The
+closed form has no calibrated tail law, so those outputs are NaN under
+``queue_model="closed_form"`` -- the tail surface is mechanism-only by
+construction.  ``repro.core.designer`` differentiates through this path
+to enforce p99 SLOs during gradient ascent.
 """
 
 from __future__ import annotations
@@ -212,6 +222,8 @@ class ModelResult:
     rho: np.ndarray              # DRAM-side bandwidth utilization
     read_gbps: np.ndarray
     write_gbps: np.ndarray
+    latency_p99_ns: np.ndarray   # p99 LLC-miss latency (NaN: closed form)
+    cpi_mem_p99: np.ndarray      # memory CPI at the p99 latency (NaN: cf)
 
     def speedup_vs(self, base: "ModelResult") -> np.ndarray:
         return self.ipc / base.ipc
@@ -240,7 +252,7 @@ def _mpki_eff(wl: WorkloadArrays, sysa: MemSystemArrays, n_active):
 
 def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
                    n_active, iface_lat_ns, lut=None):
-    """Mean latency components + stdev at the given traffic level.
+    """Mean latency components + stdev + p99 at the given traffic level.
 
     Branch-free in the design dimension: link terms are computed with
     guarded denominators and zeroed by the ``is_cxl`` mask, so a DDR design
@@ -255,6 +267,12 @@ def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
     heuristic with the DES-measured latency-stdev table.  The CXL *link*
     queue keeps its closed form either way -- the LUT tabulates the DRAM
     channel, not the serial link.
+
+    Returns ``(latency, queue, sigma, rho, latency_p99)``.  The p99 term
+    is the tail counterpart of ``latency``: DRAM service + DES-measured
+    p99 queue wait + (mean) link wait + interface premium.  The closed
+    form has no calibrated p99 law, so it returns NaN there -- consumers
+    that need the tail must solve under ``queue_model="memsim"``.
     """
     eff = _bw_efficiency(wl.wb)
     ch_bw = hw.DDR5_CH_BW_GBPS * eff
@@ -265,8 +283,8 @@ def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
             rho, kappa=wl.kappa, eta=wl.eta,
             outstanding_per_channel=outstanding, channel_bw_gbps=ch_bw)
     else:
-        w_mem, _, sigma_mem = lut.lookup(rho, wl.kappa, outstanding,
-                                         wl.eta)
+        w_mem, _, w_p99, sigma_mem = lut.lookup(rho, wl.kappa,
+                                                outstanding, wl.eta)
         w_dram = w_mem
     link_rd_bw = jnp.maximum(sysa.links * sysa.link_rd_gbps, 1e-9)
     rho_rx = read_gbps / link_rd_bw
@@ -277,12 +295,25 @@ def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
     sigma = (queueing.stdev_latency_ns(queue) if lut is None
              else jnp.broadcast_to(sigma_mem, jnp.shape(queue)))
     latency = hw.DRAM_SERVICE_NS + queue + iface_lat_ns
-    return latency, queue, sigma, rho
+    if lut is None:
+        latency_p99 = jnp.full_like(latency, jnp.nan)
+    else:
+        latency_p99 = jnp.broadcast_to(
+            hw.DRAM_SERVICE_NS + w_p99 + w_link + iface_lat_ns,
+            jnp.shape(latency))
+    return latency, queue, sigma, rho, latency_p99
 
 
 def _cpi_mem(wl, mpki_eff, latency, sigma, mlp):
     l_eff_cyc = (latency + wl.gamma * sigma) * hw.CORE_CLK_GHZ
     return (mpki_eff / 1000.0) * l_eff_cyc / mlp
+
+
+def _cpi_mem_p99(mpki_eff, latency_p99, mlp):
+    """Memory CPI with every miss charged the p99 latency -- the tail
+    counterpart of :func:`_cpi_mem` (no sigma term: the p99 already IS a
+    distributional statistic)."""
+    return (mpki_eff / 1000.0) * latency_p99 * hw.CORE_CLK_GHZ / mlp
 
 
 def _cpi_bw(wl, mpki_eff, sysa: MemSystemArrays, n_active):
@@ -338,7 +369,7 @@ def _calibrate(wl: WorkloadArrays, base: MemSystemArrays, n_active,
     """
     mpki_eff = _mpki_eff(wl, base, n_active)
     read, write = _traffic(wl, wl.ipc, mpki_eff, n_active)
-    latency, _, sigma, rho_base = _latency_terms(
+    latency, _, sigma, rho_base, _ = _latency_terms(
         wl, base, read, write, n_active, base.iface_lat_ns, lut)
     l_eff_cyc = (latency + wl.gamma * sigma) * hw.CORE_CLK_GHZ
     budget = (1.0 - wl.exec_frac) / wl.ipc
@@ -391,7 +422,7 @@ def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
 
     def body(_, ipc):
         read, write = _traffic(wl, ipc, mpki_eff, n_active)
-        latency, _, sigma, rho = _latency_terms(
+        latency, _, sigma, rho, _ = _latency_terms(
             wl, sysa, read, write, n_active, premium, lut)
         mlp_eff = _mlp_eff(wl, mlp, rho)
         cpi = jnp.maximum(
@@ -401,10 +432,12 @@ def _solve_point(wl, sysa: MemSystemArrays, base: MemSystemArrays,
 
     ipc = jax.lax.fori_loop(0, FP_ITERS, body, wl.ipc)
     read, write = _traffic(wl, ipc, mpki_eff, n_active)
-    latency, queue, sigma, rho = _latency_terms(
+    latency, queue, sigma, rho, lat_p99 = _latency_terms(
         wl, sysa, read, write, n_active, premium, lut)
     iface = jnp.broadcast_to(premium, jnp.shape(ipc))
-    return ipc, latency, queue, sigma, rho, read, write, iface
+    cpi_p99 = _cpi_mem_p99(mpki_eff, lat_p99, _mlp_eff(wl, mlp, rho))
+    return (ipc, latency, queue, sigma, rho, read, write, iface,
+            lat_p99, cpi_p99)
 
 
 #: Number of times the jitted solver has been TRACED (not called).  A trace
@@ -441,7 +474,8 @@ _solve_cells_jit = jax.jit(_solve_cells)
 
 
 def _pack_result(out, squeeze: bool) -> ModelResult:
-    ipc, latency, queue, sigma, rho, read, write, iface = out
+    (ipc, latency, queue, sigma, rho, read, write, iface,
+     lat_p99, cpi_p99) = out
     to_np = lambda x: np.asarray(x, np.float64)
     if squeeze:
         to_np = lambda x: np.asarray(x, np.float64)[0]
@@ -451,7 +485,8 @@ def _pack_result(out, squeeze: bool) -> ModelResult:
         queue_ns=to_np(queue), iface_ns=to_np(iface),
         service_ns=np.full_like(ipc, hw.DRAM_SERVICE_NS),
         sigma_ns=to_np(sigma), rho=to_np(rho), read_gbps=to_np(read),
-        write_gbps=to_np(write))
+        write_gbps=to_np(write), latency_p99_ns=to_np(lat_p99),
+        cpi_mem_p99=to_np(cpi_p99))
 
 
 def _grid(values) -> jnp.ndarray:

@@ -11,8 +11,8 @@ field (the finite in-flight population that caps the FIFO backlog) and
 ``eta`` scales the blocking-episode probability at fixed mean service
 time (the per-workload DRAM-sensitivity knob, now INSIDE the mechanism
 instead of a post-hoc multiplier on the wait) -- and the resulting
-latency distributions are reduced to three tables (mean wait / p90 wait /
-latency stdev).
+latency distributions are reduced to four tables (mean wait / p90 wait /
+p99 wait / latency stdev).
 
 :class:`QueueLUT` is a pytree of those tables plus their grids, with
 **differentiable multilinear interpolation**: the lookup is piecewise
@@ -81,12 +81,16 @@ DEFAULT_ENGINE = "event"
 class QueueLUT(NamedTuple):
     """DES-measured queue-wait surface over (rho, kappa, outstanding, eta).
 
-    A pytree of eight array leaves: four ascending coordinate grids and
-    three ``(R, K, O, E)`` tables -- mean queue wait, p90 queue wait, and
-    latency standard deviation (all ns).  :meth:`lookup` interpolates all
-    three multilinearly (clamped at the hull; the ``outstanding`` axis in
-    log space), vectorizes over any broadcastable query shapes, works
-    inside ``jit``, and is differentiable in the query point.
+    A pytree of nine array leaves: four ascending coordinate grids and
+    four ``(R, K, O, E)`` tables -- mean queue wait, p90 queue wait, p99
+    queue wait, and latency standard deviation (all ns).  :meth:`lookup`
+    interpolates all four multilinearly (clamped at the hull; the
+    ``outstanding`` axis in log space), vectorizes over any broadcastable
+    query shapes, works inside ``jit``, and is differentiable in the
+    query point.  The p99 table is what makes the solver's tail path
+    mechanistic: the event engine records every request exactly, so the
+    99th percentile costs nothing extra at build time, and downstream the
+    designer's SLO constraint differentiates straight through it.
 
     Example (a hand-built two-point surface; real tables come from
     :func:`build_queue_lut`)::
@@ -99,7 +103,7 @@ class QueueLUT(NamedTuple):
         ...                outstanding_grid=jnp.array([1.0, 100.0]),
         ...                eta_grid=jnp.array([0.0, 1.0]),
         ...                wait_ns=z.at[1].set(80.0),
-        ...                p90_wait_ns=z, sigma_ns=z)
+        ...                p90_wait_ns=z, p99_wait_ns=z, sigma_ns=z)
         >>> float(lut.wait(0.5, 1.0, 1.0, 1.0))  # halfway up the rho edge
         40.0
         >>> float(lut.wait(2.0, 1.0, 1.0, 1.0))  # clamped at the grid hull
@@ -114,10 +118,11 @@ class QueueLUT(NamedTuple):
     eta_grid: jnp.ndarray          # (E,) ascending
     wait_ns: jnp.ndarray           # (R, K, O, E) mean queue wait
     p90_wait_ns: jnp.ndarray       # (R, K, O, E) p90 queue wait
+    p99_wait_ns: jnp.ndarray       # (R, K, O, E) p99 queue wait
     sigma_ns: jnp.ndarray          # (R, K, O, E) latency stdev
 
     def lookup(self, rho, kappa, outstanding, eta=1.0):
-        """Interpolated ``(mean wait, p90 wait, sigma)`` at a query point.
+        """Interpolated ``(mean wait, p90 wait, p99 wait, sigma)``.
 
         Queries broadcast together; out-of-grid coordinates clamp to the
         nearest hull face (constant extrapolation -- the DES was not run
@@ -135,7 +140,8 @@ class QueueLUT(NamedTuple):
         loc = [_locate(g, p, log=lg)
                for g, p, lg in zip(grids, pts, logs)]
         return tuple(_blend(t, loc) for t in
-                     (self.wait_ns, self.p90_wait_ns, self.sigma_ns))
+                     (self.wait_ns, self.p90_wait_ns, self.p99_wait_ns,
+                      self.sigma_ns))
 
     def wait(self, rho, kappa, outstanding, eta=1.0):
         """Interpolated mean queue wait alone (ns)."""
@@ -237,6 +243,7 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
         outstanding_grid=to_j(outstanding), eta_grid=to_j(eta),
         wait_ns=to_j(np.maximum(stats.mean_ns - hw.DRAM_SERVICE_NS, 0.0)),
         p90_wait_ns=to_j(np.maximum(stats.p90_ns - hw.DRAM_SERVICE_NS, 0.0)),
+        p99_wait_ns=to_j(np.maximum(stats.p99_ns - hw.DRAM_SERVICE_NS, 0.0)),
         sigma_ns=to_j(stats.stdev_ns))
 
 

@@ -264,6 +264,46 @@ def sweep_spec(design=None, **axes) -> SweepSpec:
     return SweepSpec(axes=tuple(built))
 
 
+def field_bounds(spec: SweepSpec) -> dict[str, tuple[float, float]]:
+    """Per-design-field ``(lo, hi)`` ranges implied by a spec's axes.
+
+    The feasible box a projected-ascent optimizer
+    (:mod:`repro.core.designer`) derives from the frontier spec it
+    started from: a design-field axis bounds its field directly by its
+    min/max coordinates, and the design axis bounds every remaining
+    sweepable field by the spread across its design points -- so the
+    optimizer can never leave the region the grid (and hence the pareto
+    knee it started at) actually covered.
+
+    Example::
+
+        >>> from repro.core.cpu_model import COAXIAL_4X, DDR_BASELINE
+        >>> from repro.core.sweepspec import field_bounds, sweep_spec
+        >>> b = field_bounds(sweep_spec(
+        ...     design=(DDR_BASELINE, COAXIAL_4X),
+        ...     llc_mb_per_core=(0.5, 4.0)))
+        >>> b["llc_mb_per_core"]
+        (0.5, 4.0)
+        >>> b["dram_channels"]      # from the design axis' spread
+        (1.0, 4.0)
+    """
+    out: dict[str, tuple[float, float]] = {}
+    design_ax = None
+    for ax in spec.axes:
+        if ax.kind == KIND_DESIGN:
+            design_ax = ax
+        elif ax.kind == KIND_DESIGN_FIELD:
+            vals = [float(v) for v in ax.values]
+            out[ax.name] = (min(vals), max(vals))
+    if design_ax is not None:
+        for f in DESIGN_FIELDS:
+            if f in out:
+                continue
+            vals = [float(getattr(d, f)) for d in design_ax.values]
+            out[f] = (min(vals), max(vals))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Lowering: spec -> the flattened per-cell arrays the jitted solver eats.
 # ---------------------------------------------------------------------------

@@ -167,9 +167,20 @@ def _registry_changed():
 
 def register_workload(w: Workload, *, overwrite: bool = False) -> Workload:
     """Add a workload to the registry (and to every future registry-backed
-    sweep).  Table-4 names may not be shadowed unless ``overwrite``."""
-    if not overwrite and w.name in _REGISTRY:
-        raise ValueError(f"workload {w.name!r} already registered")
+    sweep).
+
+    Re-registering the SAME workload is an idempotent no-op (the
+    existing entry is returned, caches stay warm); a *different*
+    workload under an existing name -- Table-4 seeds included -- raises
+    unless ``overwrite``.
+    """
+    prev = _REGISTRY.get(w.name)
+    if prev is not None:
+        if prev == w:
+            return prev
+        if not overwrite:
+            raise ValueError(f"workload {w.name!r} already registered "
+                             f"with different parameters")
     _REGISTRY[w.name] = w
     _registry_changed()
     return w

@@ -267,7 +267,8 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
                   include_measured: bool = True,
                   peak_util: float | None = None,
                   steps: int | None = None, seed: int = 0,
-                  engine: str = "event", devices=None) -> CapacityPlan:
+                  engine: str = "event", devices=None,
+                  p99_source: str = "des", lut=None) -> CapacityPlan:
     """Sweep candidates against a trace; return every verdict + the pick.
 
     ``archs`` is one arch id or a fleet of them (requests split evenly).
@@ -275,6 +276,16 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
     utilization of the LARGEST candidate (shape-only traces); omit it to
     take the trace's absolute request rates.  ``steps`` is the DES
     simulated-time budget per cell (default :func:`default_steps`).
+
+    ``p99_source`` picks where access latency comes from: ``"des"``
+    (default) runs the batched per-cell simulation; ``"lut"`` reads the
+    mean and p99 wait from a :class:`~repro.core.queuelut.QueueLUT`
+    (``lut``, or the shared default surface) -- the same in-loop tail
+    the designer ascends, so a plan and a ``repro.core.designer`` run
+    judge candidates by one law.  LUT mode approximates each lane by
+    the LUT's build-base transfer/service constants (the per-lane
+    ``t_xfer_ns`` is folded into ``rho`` already), trading per-cell DES
+    fidelity for a zero-simulation sweep.
     """
     if isinstance(archs, str):
         archs = (archs,)
@@ -330,10 +341,25 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
                     outstanding=hw.MAX_MLP * hw.SIM_CORES / total_ch,
                     t_xfer_ns=hw.CACHE_LINE_B / per_gbps,
                     cxl_lat_ns=prem))
-    stats = memsim.simulate(configs, steps=steps, seed=seed,
-                            engine=engine, devices=devices)
-    p99 = np.asarray(stats.p99_ns, np.float64)
-    mean = np.asarray(stats.mean_ns, np.float64)
+    if p99_source == "lut":
+        from repro.core import queuelut
+        if lut is None:
+            lut = queuelut.default_queue_lut(steps=steps, engine=engine)
+        arr = lambda attr: np.asarray([getattr(c, attr) for c in configs],
+                                      np.float64)
+        w_mean, _, w_p99, _ = lut.lookup(arr("rho"), arr("kappa"),
+                                         arr("outstanding"), arr("eta"))
+        prem = arr("cxl_lat_ns")
+        mean = hw.DRAM_SERVICE_NS + np.asarray(w_mean, np.float64) + prem
+        p99 = hw.DRAM_SERVICE_NS + np.asarray(w_p99, np.float64) + prem
+    elif p99_source == "des":
+        stats = memsim.simulate(configs, steps=steps, seed=seed,
+                                engine=engine, devices=devices)
+        p99 = np.asarray(stats.p99_ns, np.float64)
+        mean = np.asarray(stats.mean_ns, np.float64)
+    else:
+        raise ValueError(f"p99_source must be 'des' or 'lut', "
+                         f"got {p99_source!r}")
     rho_of = np.asarray([c.rho for c in configs], np.float64)
 
     # --- compose token latency, judge the SLO ---------------------------
@@ -375,5 +401,6 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
     return CapacityPlan(
         archs=archs, batch=batch, context=context,
         tokens_per_req=tokens_per_req, trace=trace.name,
-        peak_rps=trace.peak_rps, slo_p99_ms=slo_p99_ms, engine=engine,
+        peak_rps=trace.peak_rps, slo_p99_ms=slo_p99_ms,
+        engine=engine if p99_source == "des" else "lut",
         steps=steps, demands=demands, verdicts=tuple(verdicts))

@@ -126,24 +126,60 @@ def load_csv(path: str, name: str | None = None,
 
     Epoch durations come from consecutive start times; the last epoch
     reuses the previous duration (or 60 s for a one-row trace).
+
+    The loader validates instead of guessing: ``t_s`` must be strictly
+    increasing (a duplicate or out-of-order timestamp would silently
+    become a zero- or negative-duration epoch), ``rps`` non-negative,
+    ``kappa >= KAPPA_MIN``, and every field float-parseable.  Violations
+    raise ``ValueError`` naming the 1-based line number.  Only the FIRST
+    non-comment line may be a non-numeric header.
     """
     rows = []
+    seen_any = False
     with open(path) as f:
-        for line in f:
+        for lineno, line in enumerate(f, start=1):
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
             parts = [p.strip() for p in line.split(",")]
+            if len(parts) < 2:
+                raise ValueError(
+                    f"{path}:{lineno}: expected t_s,rps[,kappa], "
+                    f"got {line!r}")
             try:
                 t = float(parts[0])
             except ValueError:
-                continue           # header row
-            rps = float(parts[1])
-            kappa = float(parts[2]) if len(parts) > 2 else default_kappa
-            rows.append((t, rps, kappa))
+                if not seen_any:
+                    seen_any = True
+                    continue       # header row
+                raise ValueError(
+                    f"{path}:{lineno}: non-numeric t_s {parts[0]!r} "
+                    f"(a header is only allowed as the first row)"
+                ) from None
+            seen_any = True
+            try:
+                rps = float(parts[1])
+                kappa = (float(parts[2]) if len(parts) > 2
+                         else default_kappa)
+            except ValueError as e:
+                raise ValueError(f"{path}:{lineno}: {e}") from None
+            if rows and t <= rows[-1][1][0]:
+                op = "duplicates" if t == rows[-1][1][0] else "precedes"
+                raise ValueError(
+                    f"{path}:{lineno}: t_s={t:g} {op} the previous "
+                    f"row's t_s={rows[-1][1][0]:g}; timestamps must be "
+                    f"strictly increasing")
+            if rps < 0:
+                raise ValueError(
+                    f"{path}:{lineno}: negative rps {rps:g}")
+            if kappa < KAPPA_MIN:
+                raise ValueError(
+                    f"{path}:{lineno}: kappa {kappa:g} below the "
+                    f"{KAPPA_MIN:g} floor")
+            rows.append((lineno, (t, rps, kappa)))
     if not rows:
         raise ValueError(f"no data rows in trace CSV {path!r}")
-    rows.sort(key=lambda r: r[0])
+    rows = [r for _, r in rows]
     epochs = []
     for i, (t, rps, kappa) in enumerate(rows):
         if i + 1 < len(rows):

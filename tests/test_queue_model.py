@@ -43,10 +43,16 @@ class TestQueueLUT:
                  len(queuelut.DEFAULT_KAPPA_GRID),
                  len(queuelut.DEFAULT_OUTSTANDING_GRID),
                  len(queuelut.DEFAULT_ETA_GRID))
-        for t in (lut.wait_ns, lut.p90_wait_ns, lut.sigma_ns):
+        for t in (lut.wait_ns, lut.p90_wait_ns, lut.p99_wait_ns,
+                  lut.sigma_ns):
             assert t.shape == shape
             assert np.isfinite(np.asarray(t)).all()
             assert (np.asarray(t) >= 0.0).all()
+        # Percentiles are ordered by construction: p99 >= p90 >= mean
+        # has no reason to hold cell-by-cell under DES noise at tiny
+        # waits, but p99 >= p90 is a true per-sample-set invariant.
+        assert (np.asarray(lut.p99_wait_ns)
+                >= np.asarray(lut.p90_wait_ns) - 1e-9).all()
 
     def test_grid_nodes_are_exact(self, lut):
         i, j, k, m = 3, 1, 4, 2
@@ -54,8 +60,10 @@ class TestQueueLUT:
                          float(lut.kappa_grid[j]),
                          float(lut.outstanding_grid[k]),
                          float(lut.eta_grid[m]))
-        for val, table in zip(got, (lut.wait_ns, lut.p90_wait_ns,
-                                    lut.sigma_ns)):
+        tables = (lut.wait_ns, lut.p90_wait_ns, lut.p99_wait_ns,
+                  lut.sigma_ns)
+        assert len(got) == len(tables)
+        for val, table in zip(got, tables):
             assert float(val) == pytest.approx(float(table[i, j, k, m]),
                                                rel=1e-6)
 
@@ -88,22 +96,43 @@ class TestQueueLUT:
                              float(lut.outstanding_grid[4]), mid))
         assert min(a, b) - 1e-9 <= got <= max(a, b) + 1e-9
 
-    def test_interpolation_matches_direct_des_off_grid(self, lut):
-        # (rho, kappa) strictly between grid nodes; the LUT's multilinear
-        # read must agree with a fresh DES run at the exact point (same
-        # engine as the default build).  This is the LUT-resolution
-        # instrument: the finer default grids must keep it honest.
-        rho, kappa, out = 0.41, 1.45, 192.0
+    #: The off-grid probe point: (rho, kappa) strictly between grid
+    #: nodes -- the LUT-resolution instrument shared by the mean and
+    #: p99 cross-checks below.
+    OFF_GRID = (0.41, 1.45, 192.0)
+
+    @pytest.fixture(scope="class")
+    def off_grid_cell(self):
+        rho, kappa, out = self.OFF_GRID
         assert rho not in queuelut.DEFAULT_RHO_GRID
         assert kappa not in queuelut.DEFAULT_KAPPA_GRID
         sw = coaxial.distribution_sweep(
             rho=(rho,), kappa=(kappa,), outstanding=(out,),
             steps=LUT_STEPS, reps=8, engine=queuelut.DEFAULT_ENGINE)
-        des_wait = float(sw.cell(rho=rho, kappa=kappa,
-                                 outstanding=out).mean_ns) \
-            - hw.DRAM_SERVICE_NS
+        return sw.cell(rho=rho, kappa=kappa, outstanding=out)
+
+    def test_interpolation_matches_direct_des_off_grid(
+            self, lut, off_grid_cell):
+        # The LUT's multilinear read must agree with a fresh DES run at
+        # the exact point (same engine as the default build).  This is
+        # the LUT-resolution instrument: the finer default grids must
+        # keep it honest.
+        rho, kappa, out = self.OFF_GRID
+        des_wait = float(off_grid_cell.mean_ns) - hw.DRAM_SERVICE_NS
         lut_wait = float(lut.wait(rho, kappa, out))
         assert lut_wait == pytest.approx(des_wait, rel=0.35, abs=4.0)
+
+    def test_p99_interpolation_matches_direct_des_off_grid(
+            self, lut, off_grid_cell):
+        # Same instrument for the tail: the p99 table's off-grid read
+        # vs the event engine's exact per-request p99 at that point.
+        # The p99 of a histogram is a noisier statistic than its mean,
+        # so the absolute leg of the gate is a touch wider.
+        rho, kappa, out = self.OFF_GRID
+        des_p99 = float(off_grid_cell.p99_ns) - hw.DRAM_SERVICE_NS
+        lut_p99 = float(lut.lookup(rho, kappa, out, 1.0)[2])
+        assert des_p99 > 0.0            # the DES actually has a tail
+        assert lut_p99 == pytest.approx(des_p99, rel=0.35, abs=6.0)
 
     def test_wait_monotone_in_rho_at_high_outstanding(self, lut):
         col = np.asarray(lut.wait_ns)[:, 0, -1, -1]

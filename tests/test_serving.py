@@ -81,8 +81,8 @@ class TestDemand:
 
 class TestWorkloadRegistry:
     def test_round_trip_through_solve_spec(self):
-        wls = demand.register_llm_workloads(("stablelm-1.6b",))
-        try:
+        with coaxial.scoped_registry():
+            wls = demand.register_llm_workloads(("stablelm-1.6b",))
             w = workloads.by_name("llm-stablelm-1.6b")
             assert w is wls[0] and w.suite == demand.LLM_SUITE
             assert w in workloads.all_workloads()
@@ -96,28 +96,25 @@ class TestWorkloadRegistry:
             cmpn = sw.comparison(coaxial.COAXIAL_4X)
             assert math.isfinite(float(cmpn.speedup[i]))
             assert float(cmpn.speedup[i]) > 0
-        finally:
-            demand.unregister_llm_workloads(wls)
         assert all(not n.startswith("llm-")
                    for n in (w.name for w in workloads.all_workloads()))
 
     def test_register_is_idempotent_and_restores(self):
-        n0 = len(workloads.all_workloads())
-        a = demand.register_llm_workloads(("rwkv6-1.6b",))
-        b = demand.register_llm_workloads(("rwkv6-1.6b",))
-        assert a == b and len(workloads.all_workloads()) == n0 + 1
-        demand.unregister_llm_workloads(("rwkv6-1.6b",))
-        assert len(workloads.all_workloads()) == n0
+        with coaxial.scoped_registry():
+            n0 = len(workloads.all_workloads())
+            a = demand.register_llm_workloads(("rwkv6-1.6b",))
+            b = demand.register_llm_workloads(("rwkv6-1.6b",))
+            assert a == b and len(workloads.all_workloads()) == n0 + 1
+            demand.unregister_llm_workloads(("rwkv6-1.6b",))
+            assert len(workloads.all_workloads()) == n0
 
     def test_measured_devices_round_trip(self):
         base = {d.name for d in coaxial.all_designs()}
         assert not (base & set(MEASURED_NAMES))    # opt-in, not default
-        register_measured_devices()
-        try:
+        with coaxial.scoped_registry():
+            register_measured_devices()
             now = {d.name for d in coaxial.all_designs()}
             assert set(MEASURED_NAMES) <= now
-        finally:
-            unregister_measured_devices()
         assert {d.name for d in coaxial.all_designs()} == base
 
 
@@ -153,6 +150,61 @@ class TestTraffic:
             "synthetic-diurnal"
         with pytest.raises(KeyError):
             traffic.get_trace("no-such-trace")
+
+    @staticmethod
+    def _write(tmp_path, body):
+        p = tmp_path / "trace.csv"
+        p.write_text(body)
+        return str(p)
+
+    def test_csv_rejects_nonmonotone_t(self, tmp_path):
+        path = self._write(tmp_path,
+                           "t_s,rps\n0,1.0\n120,1.5\n60,2.0\n")
+        with pytest.raises(ValueError, match=r"trace\.csv:4.*precedes"):
+            traffic.load_csv(path)
+
+    def test_csv_rejects_duplicate_t(self, tmp_path):
+        path = self._write(tmp_path, "t_s,rps\n0,1.0\n60,1.5\n60,2.0\n")
+        with pytest.raises(ValueError,
+                           match=r"trace\.csv:4.*duplicates"):
+            traffic.load_csv(path)
+
+    def test_csv_rejects_negative_rps(self, tmp_path):
+        path = self._write(tmp_path, "t_s,rps\n0,1.0\n60,-0.5\n")
+        with pytest.raises(ValueError,
+                           match=r"trace\.csv:3.*negative rps"):
+            traffic.load_csv(path)
+
+    def test_csv_rejects_sub_floor_kappa(self, tmp_path):
+        path = self._write(tmp_path, "0,1.0,1.2\n60,1.0,0.5\n")
+        with pytest.raises(ValueError, match=r"trace\.csv:2.*floor"):
+            traffic.load_csv(path)
+
+    def test_csv_rejects_garbage_mid_file(self, tmp_path):
+        # Only the FIRST row may be a non-numeric header; a later
+        # unparseable row is an error with its line number, not a row
+        # silently skipped.
+        path = self._write(tmp_path, "t_s,rps\n0,1.0\nsixty,2.0\n")
+        with pytest.raises(ValueError,
+                           match=r"trace\.csv:3.*non-numeric t_s"):
+            traffic.load_csv(path)
+        path = self._write(tmp_path, "t_s,rps\n0,1.0\n60,fast\n")
+        with pytest.raises(ValueError, match=r"trace\.csv:3"):
+            traffic.load_csv(path)
+
+    def test_csv_rejects_short_row(self, tmp_path):
+        path = self._write(tmp_path, "t_s,rps\n0,1.0\n60\n")
+        with pytest.raises(ValueError,
+                           match=r"trace\.csv:3.*expected t_s"):
+            traffic.load_csv(path)
+
+    def test_csv_accepts_comments_and_header(self, tmp_path):
+        path = self._write(tmp_path,
+                           "# measured trace\nt_s,rps,kappa\n"
+                           "0,1.0,1.3\n\n# gap comment\n60,2.0,1.8\n")
+        t = traffic.load_csv(path)
+        assert len(t.epochs) == 2
+        assert t.epochs[1].rps == 2.0 and t.epochs[1].kappa == 1.8
 
     def test_scaled(self):
         t = traffic.synthetic_diurnal(peak_rps=1.0)

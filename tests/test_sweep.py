@@ -4,6 +4,8 @@ the same model as the per-design path, and a whole grid costs ONE trace of
 the jitted solver.
 """
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -166,8 +168,8 @@ class TestRegistry:
             "test-cxl-3x", dram_channels=3, links=3,
             link_rd_gbps=hw.CXL_X8_RD_GBPS, link_wr_gbps=hw.CXL_X8_WR_GBPS,
             iface_lat_ns=hw.CXL_LAT_NS, llc_mb_per_core=1.5)
-        coaxial.register_design(custom)
-        try:
+        with coaxial.scoped_registry():
+            coaxial.register_design(custom)
             assert coaxial.get_design("test-cxl-3x") is custom
             assert custom in coaxial.all_designs()
             # Registered points flow into default sweeps and Table 2.
@@ -175,13 +177,30 @@ class TestRegistry:
             gm = sw.comparison(custom).geomean_speedup
             assert 1.0 < gm < sw.comparison("coaxial-4x").geomean_speedup
             assert "test-cxl-3x" in coaxial.area_report()
-        finally:
-            coaxial.unregister_design("test-cxl-3x")
         assert "test-cxl-3x" not in [d.name for d in coaxial.all_designs()]
 
-    def test_duplicate_rejected(self):
+    def test_duplicate_idempotent_or_rejected(self):
+        # Re-registering the SAME design is an idempotent no-op...
+        assert coaxial.register_design(COAXIAL_4X) is COAXIAL_4X
+        # ...but a DIFFERENT design under an existing name still raises
+        # (silent shadowing) unless explicitly overwritten.
+        impostor = dataclasses.replace(COAXIAL_4X, llc_mb_per_core=9.0)
         with pytest.raises(ValueError):
-            coaxial.register_design(COAXIAL_4X)
+            coaxial.register_design(impostor)
+        with coaxial.scoped_registry():
+            assert coaxial.register_design(
+                impostor, overwrite=True) is impostor
+            assert coaxial.get_design(COAXIAL_4X.name) is impostor
+        assert coaxial.get_design(COAXIAL_4X.name) is COAXIAL_4X
+
+    def test_scoped_registry_restores_on_exception(self):
+        before = coaxial.all_designs()
+        with pytest.raises(RuntimeError):
+            with coaxial.scoped_registry():
+                coaxial.register_design(
+                    dataclasses.replace(COAXIAL_4X, name="test-doomed"))
+                raise RuntimeError("boom")
+        assert coaxial.all_designs() == before
 
     def test_unknown_design(self):
         with pytest.raises(KeyError):
