@@ -126,6 +126,36 @@ def drift_table() -> str:
     return "\n".join(lines)
 
 
+def harvest_table() -> str:
+    """The idle-I/O harvesting frontier (duty x channels) and the
+    backend drift on a harvesting design -- the 2511.12349 rows."""
+    from benchmarks.harvest_headline import drift_row, frontier_rows, \
+        frontier_sim, headline
+    rows = frontier_rows(frontier_sim())
+    lines = ["| channels | duty | queuing mean ns | mean reduction | "
+             "p99 reduction |",
+             "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['channels']} | {r['duty']:g} | "
+            f"{r['q_mean0_ns']:.0f} -> {r['q_mean_ns']:.0f} | "
+            f"x{r['mean_reduction']:.2f} | x{r['p99_reduction']:.2f} |")
+    h = headline(rows)
+    d = drift_row()
+    lines += ["",
+              f"Headline: geomean x{h['reduction_gm']:.2f}, max "
+              f"x{h['reduction_max']:.2f} queuing-delay reduction "
+              f"(paper: 1.52x mean / ~3x max).",
+              f"Backend drift on coaxial-4x+harvest: closed form "
+              f"{d['closed']:.3f} vs memsim {d['memsim']:.3f} geomean "
+              f"speedup ({d['drift_pct']:+.1f}%).",
+              f"Harvest gain (memsim backend): coaxial-4x "
+              f"{d['memsim_plain']:.3f} -> {d['memsim']:.3f} "
+              f"({d['gain_pct']:+.1f}% -- the headline the closed form "
+              f"cannot see)."]
+    return "\n".join(lines)
+
+
 def pareto_table() -> str:
     """The channels x LLC area-vs-speedup frontier (named-axis sweep),
     knee point flagged -- the design the frontier says to buy."""
@@ -171,19 +201,79 @@ def serving_table(arch: str = "stablelm-1.6b",
     return "\n".join(lines)
 
 
+def _dirty_index(name: str) -> int:
+    """``BENCH_<rev>-dirty<n>.json`` -> n; the clean base point -> 0."""
+    import re
+    m = re.search(r"-dirty(\d+)\.json$", name)
+    return int(m.group(1)) if m else 0
+
+
 def _load_bench_points(bench_dir=None) -> list:
-    """All ``BENCH_*.json`` trajectory points, oldest first (mtime)."""
+    """All ``BENCH_*.json`` trajectory points, oldest first.
+
+    Ordered by each point's own recorded ``unix_time`` (falling back to
+    file mtime for pre-field points), tie-broken so a clean base rev
+    sorts before its ``-dirty<n>`` descendants and dirty points stay in
+    suffix order.  mtime alone is NOT trustworthy: a git checkout, an
+    artifact download, or a ``cp`` rewrites it, which used to shuffle
+    the trajectory and hide dirty points behind their base rev.
+    """
     import glob
     import os
     from benchmarks.run import BENCH_DIR
     d = bench_dir or BENCH_DIR
-    paths = sorted(glob.glob(os.path.join(d, "BENCH_*.json")),
-                   key=os.path.getmtime)
     pts = []
-    for p in paths:
+    for p in glob.glob(os.path.join(d, "BENCH_*.json")):
         with open(p) as f:
-            pts.append((os.path.basename(p), json.load(f)))
-    return pts
+            point = json.load(f)
+        name = os.path.basename(p)
+        t = point.get("unix_time", os.path.getmtime(p))
+        pts.append(((t, _dirty_index(name), name), name, point))
+    pts.sort(key=lambda x: x[0])
+    return [(name, point) for _, name, point in pts]
+
+
+#: Environment knobs two trajectory points must share to be comparable:
+#: wall-clock gating a 6k-step local run against a 40k-step CI run (or a
+#: different device count / module subset) would only measure the knobs.
+_BENCH_ENV_KEYS = ("devices", "REPRO_DES_STEPS", "REPRO_DES_ENGINE",
+                   "REPRO_DES_DEVICES", "only")
+
+
+def _comparable(a_env: dict, b_env: dict) -> bool:
+    return all(a_env.get(k) == b_env.get(k) for k in _BENCH_ENV_KEYS)
+
+
+def bench_regressions(points, threshold: float = 0.30) -> dict:
+    """Per-section wall-clock regressions: newest point vs the latest
+    COMPARABLE prior (same :data:`_BENCH_ENV_KEYS`).
+
+    Returns ``dict(prior=<name or None>, regressions=[...])``; the list
+    stays empty until at least two comparable points exist, so a fresh
+    trajectory (or an env-knob change) never gates.  A section regresses
+    when both runs completed ok and its wall-clock grew by more than
+    ``threshold`` (fractional, 0.30 = +30%).
+    """
+    if len(points) < 2:
+        return dict(prior=None, regressions=[])
+    _, cur = points[-1]
+    prior = next(((n, p) for n, p in reversed(points[:-1])
+                  if _comparable(p.get("env", {}), cur.get("env", {}))),
+                 None)
+    if prior is None:
+        return dict(prior=None, regressions=[])
+    name_prev, prev = prior
+    regs = []
+    for sec, s in cur.get("sections", {}).items():
+        p = prev.get("sections", {}).get(sec)
+        if (p is None or s.get("status") != "ok"
+                or p.get("status") != "ok" or not p.get("seconds")):
+            continue
+        rel = s["seconds"] / p["seconds"] - 1.0
+        if rel > threshold:
+            regs.append(dict(section=sec, prev_s=p["seconds"],
+                             cur_s=s["seconds"], pct=100.0 * rel))
+    return dict(prior=name_prev, regressions=regs)
 
 
 def bench_diff_table(bench_dir=None) -> str:
@@ -263,9 +353,15 @@ def main():
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "coaxial",
-                             "pareto", "drift", "serving", "bench"])
+                             "pareto", "drift", "harvest", "serving",
+                             "bench"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
+    ap.add_argument("--max-regress", type=float, default=None,
+                    metavar="FRAC",
+                    help="with the bench section: exit 1 when any "
+                         "section's wall-clock grew by more than FRAC "
+                         "(e.g. 0.30) vs the latest comparable point")
     args = ap.parse_args()
     if args.variants:
         print(variant_table(args.variants[0], args.variants[1], args.mesh))
@@ -290,6 +386,10 @@ def main():
         print("### Closed form vs mechanism (headline drift)\n")
         print(drift_table())
         print()
+    if args.section in ("all", "harvest"):
+        print("### Idle-I/O harvesting frontier\n")
+        print(harvest_table())
+        print()
     if args.section in ("all", "serving"):
         print("### Serving capacity plan\n")
         print(serving_table())
@@ -297,6 +397,16 @@ def main():
     if args.section in ("all", "bench"):
         print("### Benchmark trajectory (BENCH_<rev>.json diff)\n")
         print(bench_diff_table())
+        if args.max_regress is not None:
+            gate = bench_regressions(_load_bench_points(),
+                                     threshold=args.max_regress)
+            for r in gate["regressions"]:
+                print(f"REGRESSION {r['section']}: {r['prev_s']:.2f}s "
+                      f"-> {r['cur_s']:.2f}s ({r['pct']:+.0f}% > "
+                      f"+{100 * args.max_regress:.0f}% vs "
+                      f"`{gate['prior']}`)")
+            if gate["regressions"]:
+                raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ MODULES = [
     "benchmarks.sweep_grid",
     "benchmarks.pareto_frontier",
     "benchmarks.drift_headline",
+    "benchmarks.harvest_headline",
     "benchmarks.serving_capacity",
     "benchmarks.designer_opt",
     "benchmarks.memsim_speed",

@@ -721,9 +721,14 @@ def solve_spec(spec: SweepSpec, *, workloads=WORKLOADS,
             first, axes=first.axes[:q] + (qax,) + first.axes[q:],
             results=res,
             lut=next((s.lut for s in subs if s.lut is not None), None))
-    lut = cpu_model.resolve_queue_lut(queue_model, lut)
     spec = SweepSpec(tuple(axes))
     flat = build_flat(spec)
+    # Resolve AFTER flattening: a harvesting design (or harvest_duty /
+    # harvest_bw_gbps design_field axis) needs the 5-D default surface.
+    lut = cpu_model.resolve_queue_lut(
+        queue_model, lut,
+        harvest=cpu_model._any_harvest(flat["sysa"],
+                                       flat["design_overrides"]))
     res = cpu_model.solve_cells(
         flat["sysa"], n_active=flat["n_active"],
         iface_override_ns=flat["iface_override_ns"],
@@ -1067,7 +1072,8 @@ def crosscheck_engines(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
                        reps: int = 32,
                        mean_tol: float = ENGINE_MEAN_TOL,
                        p90_tol: float = ENGINE_P90_TOL,
-                       se_k: float = ENGINE_SE_K, devices=None) -> dict:
+                       se_k: float = ENGINE_SE_K, devices=None,
+                       base: "memsim.ChannelConfig | None" = None) -> dict:
     """Statistical cross-check of the two memsim engines at the closed-form
     rho anchors.
 
@@ -1086,10 +1092,17 @@ def crosscheck_engines(rhos=CALIBRATION_RHOS, *, kappa: float = 1.0,
     and the pure relative gate applies).  Returns one row per anchor
     (values, relative errors, per-engine SEs and the z-scores) plus
     ``max_abs_mean_err`` / ``max_abs_p90_err`` and an ``ok`` flag.
+
+    ``base`` replaces the default anchor channel wholesale (its ``rho``
+    is overridden per anchor) -- e.g. a harvesting configuration
+    (``harvest_duty``/``harvest_bw_gbps``) to gate engine agreement on
+    the harvested mechanism at every anchor; ``kappa``/``cxl_lat_ns``
+    are ignored when it is given.
     """
     rhos = tuple(float(r) for r in rhos)
-    base = ChannelConfig(rho=0.5, kappa=float(kappa),
-                         cxl_lat_ns=float(cxl_lat_ns))
+    if base is None:
+        base = ChannelConfig(rho=0.5, kappa=float(kappa),
+                             cxl_lat_ns=float(cxl_lat_ns))
     spec = distribution_spec(rho=rhos)
     flat = build_flat_memsim(spec, base=base)
     warm = memsim.default_warmup(steps) if warmup is None else int(warmup)

@@ -97,13 +97,17 @@ FP_DAMP = 0.5
 QUEUE_MODELS = ("closed_form", "memsim")
 
 
-def resolve_queue_lut(queue_model: str, lut=None):
+def resolve_queue_lut(queue_model: str, lut=None, *,
+                      harvest: bool = False):
     """Map a backend name to the LUT operand the jitted solver consumes.
 
     ``closed_form`` -> ``None`` (the calibrated ``queueing`` closed form);
     ``memsim`` -> the given :class:`repro.core.queuelut.QueueLUT`, or the
     cached default surface when none is passed (built by the DES's
-    per-request event engine at the default grids).  The runtime import keeps
+    per-request event engine at the default grids).  ``harvest=True``
+    means the solve needs the harvest axis: the default build gains it,
+    and an explicitly passed 4-D surface is rejected rather than
+    silently dropping the mechanism.  The runtime import keeps
     ``queuelut`` (which builds its tables through ``coaxial``) out of this
     module's import cycle.
     """
@@ -114,8 +118,29 @@ def resolve_queue_lut(queue_model: str, lut=None):
         return None
     if lut is None:
         from repro.core import queuelut
-        lut = queuelut.default_queue_lut()
+        lut = queuelut.default_queue_lut(harvest=harvest)
+    elif harvest and lut.harvest_grid is None:
+        raise ValueError(
+            "designs harvest (harvest_duty * harvest_bw_gbps > 0) but "
+            "the given QueueLUT has no harvest axis; build it with "
+            "build_queue_lut(harvest=...) or pass lut=None")
     return lut
+
+
+def _any_harvest(sysa: MemSystemArrays, sys_ov=None) -> bool:
+    """Host-side peek: does any cell harvest (effective ``harvest_duty``
+    AND ``harvest_bw_gbps`` > 0 with NaN-masked overrides applied)?  Used
+    only to pick the default LUT surface -- concrete values, never a jit
+    cache key (mirrors memsim's ``_harvest_active``)."""
+    ov = sys_ov or {}
+
+    def eff(f):
+        s = np.asarray(getattr(sysa, f), np.float64)
+        v = np.asarray(ov.get(f, np.nan), np.float64)
+        return np.where(np.isnan(v), s, v)
+
+    return bool(np.any((eff("harvest_duty") > 0.0)
+                       & (eff("harvest_bw_gbps") > 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +156,13 @@ class MemSystem:
     llc_mb_per_core: float
     rel_area: float = 1.0       # die area relative to the DDR baseline
     rel_pins: float = 1.0       # memory-interface pins relative to baseline
+    #: Idle-I/O harvesting (arXiv 2511.12349): fraction of time idle CXL
+    #: I/O links are lent to the memory pool, and the lent bandwidth each
+    #: DRAM channel gains while they are.  0/0 (the default) disables the
+    #: mechanism; it only acts under ``queue_model="memsim"`` (the closed
+    #: form has no harvest law and ignores both fields).
+    harvest_duty: float = 0.0
+    harvest_bw_gbps: float = 0.0
 
     @property
     def is_cxl(self) -> bool:
@@ -145,6 +177,8 @@ class MemSystem:
             link_wr_gbps=f(self.link_wr_gbps),
             iface_lat_ns=f(self.iface_lat_ns),
             llc_mb_per_core=f(self.llc_mb_per_core),
+            harvest_duty=f(self.harvest_duty),
+            harvest_bw_gbps=f(self.harvest_bw_gbps),
             is_cxl=f(1.0 if self.is_cxl else 0.0))
 
 
@@ -162,6 +196,8 @@ class MemSystemArrays(NamedTuple):
     link_wr_gbps: jnp.ndarray
     iface_lat_ns: jnp.ndarray
     llc_mb_per_core: jnp.ndarray
+    harvest_duty: jnp.ndarray
+    harvest_bw_gbps: jnp.ndarray
     is_cxl: jnp.ndarray
 
 
@@ -169,7 +205,8 @@ class MemSystemArrays(NamedTuple):
 #: ``is_cxl`` mask and ``iface_lat_ns``, which has its own NaN-masked
 #: override argument with the legacy CXL-only semantics).
 SWEEPABLE_DESIGN_FIELDS = ("dram_channels", "links", "link_rd_gbps",
-                           "link_wr_gbps", "llc_mb_per_core")
+                           "link_wr_gbps", "llc_mb_per_core",
+                           "harvest_duty", "harvest_bw_gbps")
 
 
 def stack_designs(designs) -> MemSystemArrays:
@@ -282,6 +319,16 @@ def _latency_terms(wl, sysa: MemSystemArrays, read_gbps, write_gbps,
         w_dram = queueing.effective_queue_wait_ns(
             rho, kappa=wl.kappa, eta=wl.eta,
             outstanding_per_channel=outstanding, channel_bw_gbps=ch_bw)
+    elif lut.harvest_grid is not None:
+        # Harvest query in table units: lent-time fraction scaled to the
+        # one-channel reference bandwidth the axis was built at
+        # (duty_eff = duty * bw / ref; see queuelut.HARVEST_REF_BW_GBPS).
+        harvest = (sysa.harvest_duty * sysa.harvest_bw_gbps /
+                   hw.DDR5_CH_BW_GBPS)
+        w_mem, _, w_p99, sigma_mem = lut.lookup(rho, wl.kappa,
+                                                outstanding, wl.eta,
+                                                harvest)
+        w_dram = w_mem
     else:
         w_mem, _, w_p99, sigma_mem = lut.lookup(rho, wl.kappa,
                                                 outstanding, wl.eta)
@@ -517,7 +564,6 @@ def solve_cells(sysa: MemSystemArrays, *, n_active, iface_override_ns=None,
     """
     wl = _to_jnp(as_arrays(workloads))
     base = (baseline or DDR_BASELINE).as_arrays()
-    lut = resolve_queue_lut(queue_model, lut)
     n = int(np.shape(sysa.dram_channels)[0])
     j = lambda x: jnp.asarray(np.asarray(x, np.float64))
     sysa = MemSystemArrays(*(j(leaf) for leaf in sysa))
@@ -525,6 +571,8 @@ def solve_cells(sysa: MemSystemArrays, *, n_active, iface_override_ns=None,
              else j(iface_override_ns))
     sys_ov = _nan_cells(n, SWEEPABLE_DESIGN_FIELDS)
     sys_ov.update({f: j(v) for f, v in (design_overrides or {}).items()})
+    lut = resolve_queue_lut(queue_model, lut,
+                            harvest=_any_harvest(sysa, sys_ov))
     wl_ov = _nan_cells(n, SWEEPABLE_WORKLOAD_FIELDS)
     wl_ov.update({f: j(v) for f, v in (workload_overrides or {}).items()})
     out = _solve_cells_jit(wl, sysa, base, j(n_active), iface, sys_ov,
@@ -749,7 +797,11 @@ def design_gradient(sys: MemSystem | None = None,
         raise ValueError(f"non-differentiable or unknown design fields "
                          f"{unknown}; choose from {GRADIENT_FIELDS}")
     baseline = baseline or DDR_BASELINE
-    lut = resolve_queue_lut(queue_model, lut)
+    lut = resolve_queue_lut(
+        queue_model, lut,
+        harvest=(_any_harvest(sys.as_arrays())
+                 or "harvest_duty" in fields
+                 or "harvest_bw_gbps" in fields))
     wl = _to_jnp(as_arrays(workloads))
     # The reference is constant under the differentiated fields; reuse the
     # shared cell solver's compile for it.

@@ -88,8 +88,11 @@ def _objective(x, sysa0, tie, wl, basea, n_active, base_ipc, lut,
                slo_s, waves, model_coef, penalty):
     """Penalized geomean speedup at design fields ``x``.
 
-    ``x`` binds ``dram_channels`` and ``llc_mb_per_core``; ``tie`` (0/1)
-    ties the link count to the channel count for CXL topologies.  The
+    ``x`` binds ``dram_channels`` and ``llc_mb_per_core`` (plus
+    ``harvest_duty`` when idle-I/O harvesting is an ascent variable --
+    the lent bandwidth itself stays a constant of ``sysa0``); ``tie``
+    (0/1) ties the link count to the channel count for CXL topologies.
+    The
     SLO term composes the LAST workload's (the serving workload's)
     differentiable p99 access latency into the capacity planner's wave
     model: ``token_p99 = max(waves * latency_p99, model_coef / ipc)``,
@@ -102,6 +105,8 @@ def _objective(x, sysa0, tie, wl, basea, n_active, base_ipc, lut,
     links = tie * ch + (1.0 - tie) * sysa0.links
     sysa = sysa0._replace(dram_channels=ch, links=links,
                           llc_mb_per_core=llc)
+    if "harvest_duty" in x:
+        sysa = sysa._replace(harvest_duty=jnp.asarray(x["harvest_duty"]))
     nan = jnp.asarray(float("nan"))
     out = cpu_model._solve_point(wl, sysa, basea, n_active, nan, lut)
     ipc, lat99 = out[0], out[8]
@@ -245,7 +250,10 @@ class DesignerResult:
             f"llc={self.start.llc_mb_per_core:g}MB",
             f"optimum ch={float(d.dram_channels):.2f} "
             f"llc={float(d.llc_mb_per_core):.2f}MB "
-            f"links={float(d.links):.2f}",
+            f"links={float(d.links):.2f}"
+            + ("" if not d.harvest_duty else
+               f" harvest duty={float(d.harvest_duty):.2f}"
+               f"@{float(d.harvest_bw_gbps):g}GB/s"),
             f"cost    rel_area={self.rel_area:.3f} (<= {self.area_budget:g})"
             f" rel_pins={self.rel_pins:.3f}"
             + ("" if np.isinf(self.pin_budget)
@@ -291,20 +299,26 @@ def _wave_geometry(arch: str | None, batch: int, context: int):
 
 
 def _verify_optimum(*, rho, kappa, eta, outstanding, premium_ns,
-                    model_p99_ns, steps, seed, engine="event") -> dict:
+                    model_p99_ns, steps, seed, engine="event",
+                    harvest_duty=0.0, harvest_bw_gbps=0.0) -> dict:
     """ONE direct DES run at the optimum's operating point.
 
     The channel config mirrors the LUT's build base (default transfer
     and service constants) at the solved (rho, kappa, outstanding, eta)
     and the design's CXL premium; ``rho`` is clamped to the LUT hull so
     the comparison judges the table's interpolation, not extrapolation
-    beyond where the surface was ever built.
+    beyond where the surface was ever built.  A harvesting optimum runs
+    the DES with the TRUE per-channel ``(harvest_duty, harvest_bw_gbps)``
+    pair -- this is the backstop for the LUT's reference-bandwidth
+    ``duty_eff`` reduction (see queuelut.DEFAULT_HARVEST_GRID).
     """
     rho_c = float(np.clip(rho, queuelut.DEFAULT_RHO_GRID[0],
                           queuelut.DEFAULT_RHO_GRID[-1]))
     cfg = memsim.ChannelConfig(
         rho=rho_c, kappa=float(kappa), outstanding=float(outstanding),
-        eta=float(eta), cxl_lat_ns=float(premium_ns))
+        eta=float(eta), cxl_lat_ns=float(premium_ns),
+        harvest_duty=float(harvest_duty),
+        harvest_bw_gbps=float(harvest_bw_gbps))
     stats = memsim.simulate([cfg], steps=int(steps), seed=int(seed),
                             engine=engine)
     des99 = float(np.asarray(stats.p99_ns).reshape(-1)[0])
@@ -314,7 +328,10 @@ def _verify_optimum(*, rho, kappa, eta, outstanding, premium_ns,
     return dict(engine=engine, steps=int(steps), rho=rho_c,
                 kappa=float(kappa), eta=float(eta),
                 outstanding=float(outstanding),
-                premium_ns=float(premium_ns), des_p99_ns=des99,
+                premium_ns=float(premium_ns),
+                harvest_duty=float(harvest_duty),
+                harvest_bw_gbps=float(harvest_bw_gbps),
+                des_p99_ns=des99,
                 model_p99_ns=float(model_p99_ns),
                 rel_err=float(rel_err), ok=bool(ok))
 
@@ -329,6 +346,8 @@ def optimize_design(*, area_budget: float = 1.2,
                     iters: int = DEFAULT_ITERS, lr: float = DEFAULT_LR,
                     tol: float = DEFAULT_TOL,
                     penalty: float = DEFAULT_PENALTY,
+                    harvest_bw_gbps: float = 0.0,
+                    harvest_duty_max: float | None = None,
                     lut=None, steps: int | None = None, seed: int = 0,
                     engine: str = "event",
                     verify_steps: int | None = None,
@@ -341,15 +360,34 @@ def optimize_design(*, area_budget: float = 1.2,
     ``arch=None`` drops the constraint.  ``lut``/``steps``/``engine``
     control the QueueLUT surface (default: the cached default grid at
     :func:`default_steps`); ``verify_steps`` the final DES
-    re-verification budget (default: the LUT's).  Returns a
-    :class:`DesignerResult`; ``result.design`` is the optimized
-    (continuous-field) :class:`MemSystem`.
+    re-verification budget (default: the LUT's).
+
+    ``harvest_bw_gbps > 0`` makes idle-I/O harvesting (arXiv 2511.12349)
+    a THIRD ascent variable: the design may lend that much idle I/O
+    bandwidth per DRAM channel, and ``harvest_duty`` joins the ascent in
+    the box ``[0, harvest_duty_max]`` (default: the top of the LUT's
+    harvest grid -- the ascent stays on the measured surface).  Lending
+    idle links costs no area or pins (they are already on the package --
+    the whole point of harvesting), so the projection leaves the duty
+    untouched; the QueueLUT then needs its harvest axis (the default
+    build gains it automatically).  Returns a :class:`DesignerResult`;
+    ``result.design`` is the optimized (continuous-field)
+    :class:`MemSystem`.
     """
     if slo_ms is not None and arch is None:
         raise ValueError("an SLO needs a serving workload: pass arch=")
     steps = default_steps() if steps is None else int(steps)
+    harvesting = float(harvest_bw_gbps) > 0.0
     if lut is None:
-        lut = queuelut.default_queue_lut(steps=steps, engine=engine)
+        lut = queuelut.default_queue_lut(steps=steps, engine=engine,
+                                         harvest=harvesting)
+    elif harvesting and lut.harvest_grid is None:
+        raise ValueError("harvest_bw_gbps > 0 needs a QueueLUT with the "
+                         "harvest axis; build_queue_lut(harvest=...) or "
+                         "pass lut=None")
+    if harvest_duty_max is None:
+        harvest_duty_max = (float(lut.harvest_grid[-1]) if harvesting
+                            else 0.0)
     pin_budget = float("inf") if pin_budget is None else float(pin_budget)
 
     if workloads is None:
@@ -381,11 +419,14 @@ def optimize_design(*, area_budget: float = 1.2,
     knee = coaxial.knee_point(feasible, cost=cost)
     start = dataclasses.replace(
         next(d for d in designs if d.name == knee["design"]),
-        llc_mb_per_core=float(knee["llc_mb_per_core"]))
+        llc_mb_per_core=float(knee["llc_mb_per_core"]),
+        harvest_bw_gbps=float(harvest_bw_gbps))
 
     # -- stage 3+4: projected ascent from the knee ----------------------
     bounds = sweepspec.field_bounds(spec)
     box = {f: bounds[f] for f in ("dram_channels", "llc_mb_per_core")}
+    if harvesting:
+        box["harvest_duty"] = (0.0, float(harvest_duty_max))
     widths = {f: hi - lo for f, (lo, hi) in box.items()}
     tie = 1.0 if start.is_cxl else 0.0
     project = make_projector(box, float(area_budget), pin_budget, tie,
@@ -409,6 +450,8 @@ def optimize_design(*, area_budget: float = 1.2,
 
     x0 = {"dram_channels": float(start.dram_channels),
           "llc_mb_per_core": float(start.llc_mb_per_core)}
+    if harvesting:
+        x0["harvest_duty"] = 0.0
     x, traj, converged = projected_ascent(
         x0, value_and_grad, project, widths=widths, lr=lr, iters=iters,
         tol=tol)
@@ -421,6 +464,7 @@ def optimize_design(*, area_budget: float = 1.2,
     design = dataclasses.replace(
         start, name="designer-opt", dram_channels=ch, links=links,
         llc_mb_per_core=x["llc_mb_per_core"],
+        harvest_duty=x.get("harvest_duty", 0.0),
         rel_area=costs["rel_area"], rel_pins=costs["rel_pins"])
     slo_wl = workloads[-1]
     outstanding = hw.SIM_CORES * hw.MAX_MLP / max(ch, 1e-9)
@@ -429,7 +473,9 @@ def optimize_design(*, area_budget: float = 1.2,
         outstanding=outstanding, premium_ns=design.iface_lat_ns,
         model_p99_ns=final["latency_p99_ns"],
         steps=steps if verify_steps is None else int(verify_steps),
-        seed=seed, engine="event")
+        seed=seed, engine="event",
+        harvest_duty=design.harvest_duty,
+        harvest_bw_gbps=design.harvest_bw_gbps)
     tok99_ms = final["token_p99_s"] * 1e3
     return DesignerResult(
         design=design, start=start, frontier=tuple(frontier),

@@ -61,7 +61,17 @@ Model per channel (both engines):
     (``coaxial.validate_calibration`` checks mean AND p90 per anchor,
     for either engine);
   * DRAM access: base latency plus uniform bank/row-state jitter;
-  * CXL: a fixed interface premium plus the link-traversal time.
+  * CXL: a fixed interface premium plus the link-traversal time;
+  * harvesting (arXiv 2511.12349): for a fraction ``harvest_duty`` of
+    the time the channel borrows an idle CXL I/O link and transfers at
+    ``base + harvest_bw_gbps``.  Lent/reclaimed windows alternate
+    through a second two-state modulating chain sharing the MMPP's 1-ns
+    lattice (mean window ``harvest_sojourn_ns``); a request admitted
+    during a lent window enqueues its work scaled by ``base_bw /
+    (base_bw + harvest_bw)``.  The chain's randomness comes from a
+    SEPARATE salted stream per lane, so ``harvest_duty = 0`` (the
+    default) is bit-identical to the unharvested simulator on both
+    engines -- the arrival/service streams never shift.
 
 Every calibration constant is also a per-channel *field* of
 :class:`ChannelConfig` / :class:`ChannelArrays` (the module-level constants
@@ -151,6 +161,17 @@ STALL_ALPHA2 = 1.3495
 STALL_MAX_NS = 1903.7
 #: Floor on the non-penalized per-request service time (ns).
 MIN_SERVICE_NS = 0.05
+
+#: Idle-I/O bandwidth harvesting (arXiv 2511.12349): mean sojourn of
+#: each lent / reclaimed window of the harvest modulating chain (ns).
+#: I/O idleness varies on the same microsecond scale as the MMPP burst
+#: envelope, so the default matches ``BURST_SOJOURN_NS``.
+HARVEST_SOJOURN_NS = 2000.0
+#: Threefry salt deriving the harvest chain's streams from each chunk /
+#: phase key (``fold_in(key, salt)``); far above any lane index, so the
+#: harvest draws can never collide with -- or shift -- the arrival and
+#: service streams (the ``harvest_duty = 0`` bit-identity contract).
+_HARVEST_SALT = 0x48415256
 
 #: Default warmup fraction: the leading ``steps // WARMUP_DIV`` ns of
 #: simulated time are simulated but not recorded (both engines).
@@ -244,6 +265,14 @@ class ChannelConfig:
     stall_alpha2: float = STALL_ALPHA2
     stall_max_ns: float = STALL_MAX_NS
     service_jitter_ns: float = SERVICE_JITTER_NS
+    #: Idle-I/O harvesting: fraction of time (in [0, 1)) an idle I/O
+    #: link is lent to this channel, and the extra bandwidth it brings.
+    #: While lent, a request's enqueued work shrinks by
+    #: ``base_bw / (base_bw + harvest_bw_gbps)``.  ``harvest_duty = 0``
+    #: (the default) is bit-identical to the unharvested simulator.
+    harvest_duty: float = 0.0
+    harvest_bw_gbps: float = 0.0
+    harvest_sojourn_ns: float = HARVEST_SOJOURN_NS
 
 
 class ChannelArrays(NamedTuple):
@@ -271,6 +300,9 @@ class ChannelArrays(NamedTuple):
     stall_alpha2: jnp.ndarray
     stall_max_ns: jnp.ndarray
     service_jitter_ns: jnp.ndarray
+    harvest_duty: jnp.ndarray
+    harvest_bw_gbps: jnp.ndarray
+    harvest_sojourn_ns: jnp.ndarray
 
 
 #: Channel fields a distribution-sweep axis may bind (all of them).
@@ -375,6 +407,56 @@ def _channel_terms(c: ChannelArrays) -> dict:
                 lam_lo=lam_lo, lam_avg=lam_avg)
 
 
+def _harvest_terms(c: ChannelArrays) -> dict:
+    """Derived harvest-chain quantities shared by both engines.
+
+    Deliberately NOT folded into :func:`_channel_terms`: the harvest
+    terms are consumed only by the (separately jitted) harvest entry
+    points, so the pre-harvest stage A executables stay byte-identical
+    and the ``harvest_duty = 0`` histograms cannot shift.
+
+    The lent/reclaimed chain mirrors the MMPP burst chain: per-ns leave
+    probability ``1 / harvest_sojourn_ns`` and a duty-correct entry
+    probability so the stationary lent fraction is ``harvest_duty``
+    (exactly 0.0 at duty = 0 -- the chain never leaves the reclaimed
+    state).  ``h_scale`` is the work shrink while lent,
+    ``base_bw / (base_bw + harvest_bw)`` with the channel's own base
+    bandwidth ``CACHE_LINE_B / t_xfer_ns`` -- exactly 1.0 at
+    ``harvest_bw_gbps = 0``.
+    """
+    h_leave = 1.0 / c.harvest_sojourn_ns
+    h_enter = h_leave * c.harvest_duty / (1.0 - c.harvest_duty)
+    h_scale = 1.0 / (1.0 + c.harvest_bw_gbps * c.t_xfer_ns /
+                     hw.CACHE_LINE_B)
+    return dict(h_leave=h_leave, h_enter=h_enter, h_scale=h_scale)
+
+
+def _harvest_scan_terms(cha: ChannelArrays, ov):
+    return _harvest_terms(_apply_channel_overrides(cha, ov))
+
+
+_harvest_scan_terms_jit = jax.jit(_harvest_scan_terms)
+
+
+def _harvest_active(cha: ChannelArrays, ov) -> bool:
+    """Host-side fast path: True iff any lane has an effective
+    ``harvest_duty > 0`` AND ``harvest_bw_gbps > 0``.
+
+    Inactive batches skip the harvest draws / window tables entirely --
+    the chain is a provable no-op there (``h_enter = 0`` or ``h_scale =
+    1``), so the skip is value-identical and the unharvested path keeps
+    its pre-harvest wall-clock.  A value peek in the driver, not a
+    trace-cache key: the same stage B kernel runs either way, so the
+    one-trace-per-grid invariant is untouched.
+    """
+    def eff(field):
+        own = np.asarray(getattr(cha, field), np.float64)
+        o = np.asarray(ov[field], np.float64)
+        return np.where(np.isnan(o), own, o)
+    return bool(np.any((eff("harvest_duty") > 0.0)
+                       & (eff("harvest_bw_gbps") > 0.0)))
+
+
 # ---------------------------------------------------------------------------
 # Two-stage kernels: width-pinned randomness, shardable recursion.
 #
@@ -477,6 +559,20 @@ def _ts_draws(cha: ChannelArrays, ov, lane_idx, key, chunk: int):
 _ts_draws_jit = jax.jit(_ts_draws, static_argnames=("chunk",))
 
 
+def _ts_harvest_u(lane_idx, key, chunk: int):
+    """Harvest half of timestep stage A: one chunk of per-lane switch
+    uniforms for the lent/reclaimed chain, drawn from a SEPARATE salted
+    lane-keyed stream (``fold_in(key, _HARVEST_SALT)``) so the five
+    arrival/service uniforms of :func:`_ts_draws` -- and with them the
+    ``harvest_duty = 0`` histograms -- never shift.  A separate jitted
+    executable for the same reason."""
+    return _lane_uniforms(jax.random.fold_in(key, _HARVEST_SALT),
+                          lane_idx, (chunk,))
+
+
+_ts_harvest_u_jit = jax.jit(_ts_harvest_u, static_argnames=("chunk",))
+
+
 def _scan_terms(cha: ChannelArrays, ov):
     """Per-run channel constants consumed by the stage B scans (computed
     once at the unpadded width, like stage A): MMPP switch/rate terms,
@@ -494,7 +590,7 @@ _scan_terms_jit = jax.jit(_scan_terms)
 
 
 def _ts_chunk_core(terms, state, lane_idx, switch_u, arrive_u, jitter, svc,
-                   record, n_total: int):
+                   harvest_u, record, n_total: int):
     """Stage B of the timestep engine: one chunk of the backlog scan.
 
     The per-nanosecond recursion over stage A's precomputed draws.
@@ -510,18 +606,29 @@ def _ts_chunk_core(terms, state, lane_idx, switch_u, arrive_u, jitter, svc,
     p_leave, p_enter = terms["p_leave"], terms["p_enter"]
     rate_hi, rate_lo = terms["rate_hi"], terms["rate_lo"]
     bound, lat0 = terms["bound"], terms["lat0"]
+    h_leave, h_enter = terms["h_leave"], terms["h_enter"]
+    h_scale = terms["h_scale"]
 
     # Strong-typed 0/1 so the carry dtype is stable across chunk calls
     # (a weak-typed literal would force a second trace of the kernel).
     zero, one = jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32)
 
     def step(carry, xs):
-        sw, au, jit_ns, s, rec = xs
-        backlog, in_burst = carry
+        sw, au, jit_ns, s, hu, rec = xs
+        backlog, in_burst, lent = carry
         in_burst = jnp.where(
             in_burst > 0.5,
             jnp.where(sw < p_leave, zero, one),
             jnp.where(sw < p_enter, one, zero))
+        # Harvest lent/reclaimed chain: the same two-state construction
+        # as the MMPP burst chain, on the same lattice.  ``h_enter`` is
+        # exactly 0.0 at duty = 0, so the chain never leaves the
+        # reclaimed state and ``s_eff`` is exactly ``s`` -- the
+        # unharvested backlog path, bit for bit.
+        lent = jnp.where(
+            lent > 0.5,
+            jnp.where(hu < h_leave, zero, one),
+            jnp.where(hu < h_enter, one, zero))
         rate = jnp.where(in_burst > 0.5, rate_hi, rate_lo)
         arrive = (au < rate).astype(jnp.float32)
         # Closed-loop population bound: while the backlog holds more than
@@ -530,13 +637,14 @@ def _ts_chunk_core(terms, state, lane_idx, switch_u, arrive_u, jitter, svc,
         # not queued.  inf (the default) admits everything: open loop.
         arrive = arrive * (backlog <= bound).astype(jnp.float32)
         latency = backlog + lat0 + jit_ns
+        s_eff = jnp.where(lent > 0.5, s * h_scale, s)
         # arrive is an exact 0/1, so ``backlog + arrive * s`` cannot be
         # perturbed by FMA contraction -- stage B stays compile-exact.
-        backlog = jnp.maximum(backlog + arrive * s - 1.0, 0.0)
-        return (backlog, in_burst), (latency, arrive * rec)
+        backlog = jnp.maximum(backlog + arrive * s_eff - 1.0, 0.0)
+        return (backlog, in_burst, lent), (latency, arrive * rec)
 
     state, (lat, mask) = jax.lax.scan(
-        step, state, (switch_u, arrive_u, jitter, svc, record))
+        step, state, (switch_u, arrive_u, jitter, svc, harvest_u, record))
     return state, _flat_bins(lat, mask > 0.0, lane_idx, n_total)
 
 
@@ -548,25 +656,27 @@ def _ts_kernel(ndev: int, n_total: int, n_real: int):
     pad = n_total - n_real
     lane_idx = jnp.arange(n_total, dtype=jnp.int32)
 
-    def body(terms, state, lanes, switch_u, arrive_u, jitter, svc, record):
+    def body(terms, state, lanes, switch_u, arrive_u, jitter, svc,
+             harvest_u, record):
         return _ts_chunk_core(terms, state, lanes, switch_u, arrive_u,
-                              jitter, svc, record, n_total)
+                              jitter, svc, harvest_u, record, n_total)
 
     L, R = shardsim.lanes(), shardsim.replicated()
     L1 = shardsim.lanes(1)
     fn = shardsim.jit_lanes(
         body, ndev,
-        in_specs=(L, L, L, L1, L1, L1, L1, R),
+        in_specs=(L, L, L, L1, L1, L1, L1, L1, R),
         out_specs=(L, L1))
 
-    def run(terms, state, switch_u, arrive_u, jitter, svc, record):
+    def run(terms, state, switch_u, arrive_u, jitter, svc, harvest_u,
+            record):
         # NaN terms / zeroed draws on padding lanes: they never arrive,
         # never record, and park all mass in the overflow slot.
         terms = {k: _pad_cols(v, pad, np.nan) for k, v in terms.items()}
         return fn(terms, state, lane_idx,
                   _pad_cols(switch_u, pad, 0.0), _pad_cols(arrive_u, pad, 0.0),
                   _pad_cols(jitter, pad, 0.0), _pad_cols(svc, pad, 0.0),
-                  record)
+                  _pad_cols(harvest_u, pad, 0.0), record)
 
     return jax.jit(run)
 
@@ -677,6 +787,54 @@ def _event_arrivals(cha: ChannelArrays, ov, state, lane_idx, key, tabs,
 
 
 _event_arrivals_jit = jax.jit(_event_arrivals, static_argnames=("chunk",))
+
+
+def _event_harvest_tabs(cha: ChannelArrays, ov, lane_idx, key,
+                        n_windows: int):
+    """Simulate the harvest lent/reclaimed chain once per call (per lane).
+
+    Alternating exponential sojourns starting in the RECLAIMED state,
+    drawn from the salted lane-keyed streams (the event-engine mirror of
+    :func:`_event_tables`'s MMPP sojourns -- same window count, sized
+    from the request budget alone so the trace stays value-independent).
+    Returns per-lane ``(M,)`` cumulative boundary times; the interval an
+    arrival lands in (``searchsorted``) is lent iff its index is odd.
+    At ``duty = 0`` the first reclaimed sojourn is infinite
+    (``1 / h_enter``), so every arrival lands in interval 0.
+    """
+    c = _apply_channel_overrides(cha, ov)
+    t = _harvest_terms(c)
+    su = _lane_uniforms(jax.random.fold_in(key, _HARVEST_SALT),
+                        lane_idx, (n_windows,), minval=1e-12)
+    lent = (jnp.arange(n_windows) % 2 == 1)[:, None]
+    soj = -jnp.log(su) * jnp.where(lent, 1.0 / t["h_leave"],
+                                   1.0 / t["h_enter"])
+    return jnp.cumsum(soj, axis=0).T                      # (n, M)
+
+
+_event_harvest_tabs_jit = jax.jit(_event_harvest_tabs,
+                                  static_argnames=("n_windows",))
+
+
+def _event_harvest_scale(svc, gaps, t0, bounds, h_scale):
+    """Scale the services that arrive inside lent windows (event engine).
+
+    A separate executable BETWEEN stage A and stage B: the arrival /
+    service draws upstream (:func:`_event_arrivals`) and the Lindley
+    kernel downstream are the exact same executables as the unharvested
+    path -- this pass is simply skipped when harvesting is inactive, so
+    ``duty = 0`` stays bit-identical by construction.  Arrival times are
+    rebuilt from the gaps: lattice cells are whole f32 integers, so the
+    cumulative sum reproduces them exactly (below 2**24 ns of simulated
+    horizon, far beyond any realistic budget).
+    """
+    arr_t = t0[None, :] + jnp.cumsum(gaps, axis=0)        # (C, n)
+    idx = jax.vmap(jnp.searchsorted, in_axes=(0, 0))(bounds, arr_t.T)
+    lent = (idx % 2 == 1).T
+    return jnp.where(lent, svc * h_scale[None, :], svc)
+
+
+_event_harvest_scale_jit = jax.jit(_event_harvest_scale)
 
 
 def _event_chunk_core(terms, W, lane_idx, gaps, svc, rec_time,
@@ -904,16 +1062,23 @@ def _run_timestep(cha, ov, steps, seed, warmup, ndev, n_real, pad):
     record = np.zeros(n_chunks * chunk, np.float32)
     record[warmup:steps] = 1.0
     lane_r = jnp.arange(n_real, dtype=jnp.int32)
-    terms = _scan_terms_jit(cha, ov)
-    state = (jnp.zeros(n_tot), jnp.ones(n_tot))
+    terms = {**_scan_terms_jit(cha, ov), **_harvest_scan_terms_jit(cha, ov)}
+    state = (jnp.zeros(n_tot), jnp.ones(n_tot), jnp.zeros(n_tot))
     fn = _ts_kernel(ndev, n_tot, n_real)
+    # Unharvested batches skip the extra per-step uniform: with
+    # ``h_enter = 0`` the chain ignores its draws, so constant zeros are
+    # value-identical (same kernel, same trace) and cost nothing.
+    hactive = _harvest_active(cha, ov)
+    hu0 = None if hactive else jnp.zeros((chunk, n_real), jnp.float32)
 
     def dispatch(k):
         nonlocal state
         sw, au, jit_ns, svc = _ts_draws_jit(cha, ov, lane_r,
                                             jnp.asarray(ckeys[k]),
                                             chunk=chunk)
-        state, flat = fn(terms, state, sw, au, jit_ns, svc,
+        hu = (_ts_harvest_u_jit(lane_r, jnp.asarray(ckeys[k]), chunk=chunk)
+              if hactive else hu0)
+        state, flat = fn(terms, state, sw, au, jit_ns, svc, hu,
                          jnp.asarray(record[k * chunk:(k + 1) * chunk]))
         return flat
 
@@ -935,11 +1100,24 @@ def _run_event(cha, ov, steps, seed, warmup, events, ndev, n_real, pad):
     W = jnp.zeros(n_tot)
     warm = jnp.float32(warmup)
     fn = _event_kernel(ndev, n_tot, n_real, chunk)
+    # Harvest windows: a second sojourn table from the salted stream and
+    # a standalone scaling pass between the stages -- both skipped
+    # entirely when harvesting is inactive, so the unharvested event
+    # path runs the exact pre-harvest executables.
+    hactive = _harvest_active(cha, ov)
+    if hactive:
+        htabs = _event_harvest_tabs_jit(cha, ov, lane_r, phase_key,
+                                        n_windows=n_sojourns)
+        h_scale = _harvest_scan_terms_jit(cha, ov)["h_scale"]
 
     def dispatch(k):
         nonlocal state_a, W
+        t_prev = state_a[1]
         state_a, gaps, svc, rec_time = _event_arrivals_jit(
             cha, ov, state_a, lane_r, keys[k], tabs, warm, chunk=chunk)
+        if hactive:
+            svc = _event_harvest_scale_jit(svc, gaps, t_prev, htabs,
+                                           h_scale)
         W, flat = fn(terms, W, gaps, svc, rec_time)
         return flat
 

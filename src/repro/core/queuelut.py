@@ -68,6 +68,19 @@ DEFAULT_OUTSTANDING_GRID = (2.0, 4.0, 8.0, 24.0, 64.0, 192.0)
 #: (the wait is dominated by the episode-probability term), so four
 #: points carry it.
 DEFAULT_ETA_GRID = (0.05, 0.30, 0.60, 1.0)
+#: Optional 5th axis: lent-time fraction of the idle-I/O harvesting chain
+#: (arXiv 2511.12349 on top of CoaXiaL).  The table is built at the
+#: REFERENCE lent bandwidth :data:`HARVEST_REF_BW_GBPS` -- one DDR5
+#: channel's worth, which is also what one lent CXL x8 link contributes
+#: (26 + 13 GB/s goodput) -- so the axis coordinate is "fraction of time
+#: one extra channel's bandwidth is present".  Queries at other lent
+#: bandwidths map through ``duty_eff = duty * bw / ref`` (see
+#: ``cpu_model._latency_terms``).  Chosen over a plain effective-rho
+#: mapping, which violates the designer's 35%/4ns verification envelope
+#: by up to 227% in the bursty open-loop corner (see
+#: docs/ARCHITECTURE.md "Harvesting").
+DEFAULT_HARVEST_GRID = (0.0, 0.25, 0.5, 0.75)
+HARVEST_REF_BW_GBPS = hw.DDR5_CH_BW_GBPS
 #: Default DES budget per cell (ns simulated) and replicas per cell.
 DEFAULT_STEPS = 120_000
 DEFAULT_REPS = 2
@@ -116,12 +129,15 @@ class QueueLUT(NamedTuple):
     kappa_grid: jnp.ndarray        # (K,) ascending
     outstanding_grid: jnp.ndarray  # (O,) ascending, positive
     eta_grid: jnp.ndarray          # (E,) ascending
-    wait_ns: jnp.ndarray           # (R, K, O, E) mean queue wait
-    p90_wait_ns: jnp.ndarray       # (R, K, O, E) p90 queue wait
-    p99_wait_ns: jnp.ndarray       # (R, K, O, E) p99 queue wait
-    sigma_ns: jnp.ndarray          # (R, K, O, E) latency stdev
+    wait_ns: jnp.ndarray           # (R, K, O, E[, H]) mean queue wait
+    p90_wait_ns: jnp.ndarray       # (R, K, O, E[, H]) p90 queue wait
+    p99_wait_ns: jnp.ndarray       # (R, K, O, E[, H]) p99 queue wait
+    sigma_ns: jnp.ndarray          # (R, K, O, E[, H]) latency stdev
+    #: Optional 5th axis (None => 4-D tables): lent-time fraction of the
+    #: idle-I/O harvesting chain at the reference lent bandwidth.
+    harvest_grid: jnp.ndarray | None = None
 
-    def lookup(self, rho, kappa, outstanding, eta=1.0):
+    def lookup(self, rho, kappa, outstanding, eta=1.0, harvest=0.0):
         """Interpolated ``(mean wait, p90 wait, p99 wait, sigma)``.
 
         Queries broadcast together; out-of-grid coordinates clamp to the
@@ -130,22 +146,34 @@ class QueueLUT(NamedTuple):
         ``outstanding`` fraction is computed in log space: its grid is
         geometric, and a query like 96 on a (64, 192) cell should sit
         near the geometric midpoint, not 1/4 from the top.
+
+        ``harvest`` queries the optional 5th axis; on a 4-D surface
+        (``harvest_grid is None``) it is IGNORED -- callers that need the
+        harvested mechanism must build with ``harvest=`` (``cpu_model``
+        resolves the right surface and raises on a mismatch).  A
+        ``harvest=0.0`` query on a 5-D surface lands exactly on the
+        duty-0 grid plane (the grid starts at 0), so unharvested lookups
+        interpolate the same cells either way.
         """
-        pts = jnp.broadcast_arrays(*(jnp.asarray(x, self.wait_ns.dtype)
-                                     for x in (rho, kappa, outstanding,
-                                               eta)))
+        q = (rho, kappa, outstanding, eta)
+        logs = (False, False, True, False)
         grids = (self.rho_grid, self.kappa_grid, self.outstanding_grid,
                  self.eta_grid)
-        logs = (False, False, True, False)
+        if self.harvest_grid is not None:
+            q += (harvest,)
+            logs += (False,)
+            grids += (self.harvest_grid,)
+        pts = jnp.broadcast_arrays(*(jnp.asarray(x, self.wait_ns.dtype)
+                                     for x in q))
         loc = [_locate(g, p, log=lg)
                for g, p, lg in zip(grids, pts, logs)]
         return tuple(_blend(t, loc) for t in
                      (self.wait_ns, self.p90_wait_ns, self.p99_wait_ns,
                       self.sigma_ns))
 
-    def wait(self, rho, kappa, outstanding, eta=1.0):
+    def wait(self, rho, kappa, outstanding, eta=1.0, harvest=0.0):
         """Interpolated mean queue wait alone (ns)."""
-        return self.lookup(rho, kappa, outstanding, eta)[0]
+        return self.lookup(rho, kappa, outstanding, eta, harvest)[0]
 
 
 def _locate(grid, x, log: bool = False):
@@ -198,7 +226,8 @@ def _check_grid(name, grid, positive: bool = False):
 
 def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
                     outstanding=DEFAULT_OUTSTANDING_GRID,
-                    eta=DEFAULT_ETA_GRID,
+                    eta=DEFAULT_ETA_GRID, harvest=None,
+                    harvest_bw_gbps: float = HARVEST_REF_BW_GBPS,
                     steps: int = DEFAULT_STEPS, seed: int = 0,
                     reps: int = DEFAULT_REPS, base=None,
                     engine: str = DEFAULT_ENGINE,
@@ -215,6 +244,12 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
     ``$REPRO_DES_DEVICES``) -- the default 4-D grid is what the sharded
     DES buys, and the tables are bit-identical at any device count.
 
+    ``harvest`` (a duty grid in [0, 1), e.g.
+    :data:`DEFAULT_HARVEST_GRID`) grows the optional 5th axis: the sweep
+    gains a ``harvest_duty`` dimension and the base channel lends
+    ``harvest_bw_gbps`` while lent (default: the reference one-channel
+    bandwidth, see :data:`HARVEST_REF_BW_GBPS`).
+
     Example (tiny grid, doctest-sized budget)::
 
         >>> from repro.core.queuelut import build_queue_lut
@@ -226,16 +261,31 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
         >>> bool(lut.wait(0.6, 1.0, 192.0, 1.0) >
         ...      lut.wait(0.2, 1.0, 192.0, 1.0))
         True
+        >>> hlut = build_queue_lut(rho=(0.2, 0.6), kappa=(1.0, 2.0),
+        ...                        outstanding=(8.0, 192.0),
+        ...                        eta=(0.1, 1.0), harvest=(0.0, 0.5),
+        ...                        steps=4000, reps=1)
+        >>> hlut.wait_ns.shape
+        (2, 2, 2, 2, 2)
     """
-    from repro.core import coaxial  # runtime: coaxial imports cpu_model
+    from repro.core import coaxial, memsim  # runtime: import cycle
     rho = _check_grid("rho", rho)
     kappa = _check_grid("kappa", kappa)
     outstanding = _check_grid("outstanding", outstanding, positive=True)
     eta = _check_grid("eta", eta)
+    axes = dict(rho=rho, kappa=kappa, outstanding=outstanding, eta=eta)
+    if harvest is not None:
+        harvest = _check_grid("harvest", harvest)
+        if harvest[0] < 0.0 or harvest[-1] >= 1.0:
+            raise ValueError(f"harvest (duty) grid must lie in [0, 1): "
+                             f"{list(harvest)}")
+        axes["harvest_duty"] = harvest
+        if base is None:
+            base = memsim.ChannelConfig(
+                rho=0.5, harvest_bw_gbps=float(harvest_bw_gbps))
     sw = coaxial.distribution_sweep(
-        rho=rho, kappa=kappa, outstanding=outstanding, eta=eta,
-        base=base, steps=int(steps), seed=int(seed), reps=int(reps),
-        engine=engine, devices=devices)
+        **axes, base=base, steps=int(steps), seed=int(seed),
+        reps=int(reps), engine=engine, devices=devices)
     stats = sw.stats
     to_j = lambda x: jnp.asarray(np.asarray(x, np.float64))
     return QueueLUT(
@@ -244,20 +294,26 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
         wait_ns=to_j(np.maximum(stats.mean_ns - hw.DRAM_SERVICE_NS, 0.0)),
         p90_wait_ns=to_j(np.maximum(stats.p90_ns - hw.DRAM_SERVICE_NS, 0.0)),
         p99_wait_ns=to_j(np.maximum(stats.p99_ns - hw.DRAM_SERVICE_NS, 0.0)),
-        sigma_ns=to_j(stats.stdev_ns))
+        sigma_ns=to_j(stats.stdev_ns),
+        harvest_grid=None if harvest is None else to_j(harvest))
 
 
 @functools.lru_cache(maxsize=None)
 def default_queue_lut(steps: int = DEFAULT_STEPS, seed: int = 0,
                       reps: int = DEFAULT_REPS,
-                      engine: str = DEFAULT_ENGINE) -> QueueLUT:
+                      engine: str = DEFAULT_ENGINE,
+                      harvest: bool = False) -> QueueLUT:
     """The shared default-grid surface; built once per (steps, seed,
-    reps, engine).
+    reps, engine, harvest).
 
     This is what ``cpu_model.solve(..., queue_model="memsim")`` uses when
-    no explicit LUT is passed.  The build honours ``$REPRO_DES_DEVICES``
-    (via ``devices=None``), and the tables are device-count-invariant, so
-    the cache key need not include it.
+    no explicit LUT is passed (``harvest=True`` when any solved design
+    harvests -- the tables gain the :data:`DEFAULT_HARVEST_GRID` axis).
+    The build honours ``$REPRO_DES_DEVICES`` (via ``devices=None``), and
+    the tables are device-count-invariant, so the cache key need not
+    include it.
     """
     return build_queue_lut(steps=steps, seed=seed, reps=reps,
-                           engine=engine)
+                           engine=engine,
+                           harvest=DEFAULT_HARVEST_GRID if harvest
+                           else None)

@@ -266,6 +266,7 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
                   include_registry: bool = True,
                   include_measured: bool = True,
                   peak_util: float | None = None,
+                  harvest_bw_gbps: float = 0.0,
                   steps: int | None = None, seed: int = 0,
                   engine: str = "event", devices=None,
                   p99_source: str = "des", lut=None) -> CapacityPlan:
@@ -286,6 +287,14 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
     the LUT's build-base transfer/service constants (the per-lane
     ``t_xfer_ns`` is folded into ``rho`` already), trading per-cell DES
     fidelity for a zero-simulation sweep.
+
+    ``harvest_bw_gbps > 0`` enables idle-I/O harvesting (arXiv
+    2511.12349): each epoch lends that much idle I/O bandwidth per
+    channel for its ``harvest_duty`` fraction of time (fill the trace
+    via :meth:`~repro.serving.traffic.Trace.with_harvest`, which
+    anti-correlates duty with load, or a 4th CSV column).  DES cells
+    run the true two-state chain; LUT mode queries the harvest axis at
+    the reference-bandwidth ``duty_eff`` reduction.
     """
     if isinstance(archs, str):
         archs = (archs,)
@@ -340,15 +349,32 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
                     rho=rho, kappa=e.kappa,
                     outstanding=hw.MAX_MLP * hw.SIM_CORES / total_ch,
                     t_xfer_ns=hw.CACHE_LINE_B / per_gbps,
-                    cxl_lat_ns=prem))
+                    cxl_lat_ns=prem,
+                    harvest_duty=e.harvest_duty,
+                    harvest_bw_gbps=float(harvest_bw_gbps)))
     if p99_source == "lut":
         from repro.core import queuelut
+        needs_h = (float(harvest_bw_gbps) > 0.0
+                   and any(e.harvest_duty > 0.0 for e in epochs))
         if lut is None:
-            lut = queuelut.default_queue_lut(steps=steps, engine=engine)
+            lut = queuelut.default_queue_lut(steps=steps, engine=engine,
+                                             harvest=needs_h)
+        elif needs_h and lut.harvest_grid is None:
+            raise ValueError(
+                "harvesting trace needs a QueueLUT with the harvest "
+                "axis; build_queue_lut(harvest=...) or pass lut=None")
         arr = lambda attr: np.asarray([getattr(c, attr) for c in configs],
                                       np.float64)
-        w_mean, _, w_p99, _ = lut.lookup(arr("rho"), arr("kappa"),
-                                         arr("outstanding"), arr("eta"))
+        if lut.harvest_grid is not None:
+            hq = (arr("harvest_duty") * arr("harvest_bw_gbps") /
+                  queuelut.HARVEST_REF_BW_GBPS)
+            w_mean, _, w_p99, _ = lut.lookup(
+                arr("rho"), arr("kappa"), arr("outstanding"),
+                arr("eta"), hq)
+        else:
+            w_mean, _, w_p99, _ = lut.lookup(arr("rho"), arr("kappa"),
+                                             arr("outstanding"),
+                                             arr("eta"))
         prem = arr("cxl_lat_ns")
         mean = hw.DRAM_SERVICE_NS + np.asarray(w_mean, np.float64) + prem
         p99 = hw.DRAM_SERVICE_NS + np.asarray(w_p99, np.float64) + prem

@@ -44,10 +44,17 @@ class Epoch:
     dur_s: float     # epoch length, seconds
     rps: float       # mean offered request rate in the epoch
     kappa: float     # within-epoch burst peak-to-mean ratio (>= 1)
+    #: Idle-I/O harvest lent-time fraction inside this epoch (arXiv
+    #: 2511.12349): how much of the epoch the I/O links are idle enough
+    #: to lend to the memory pool.  0 (the default) = no harvesting;
+    #: :meth:`Trace.with_harvest` fills it anti-correlated with load.
+    harvest_duty: float = 0.0
 
     def __post_init__(self):
         if self.dur_s <= 0 or self.rps < 0 or self.kappa < KAPPA_MIN:
             raise ValueError(f"bad epoch {self!r}")
+        if not 0.0 <= self.harvest_duty < 1.0:
+            raise ValueError(f"harvest_duty must be in [0, 1): {self!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,11 +82,33 @@ class Trace:
             dataclasses.replace(e, rps=e.rps * factor)
             for e in self.epochs))
 
+    def with_harvest(self, duty_max: float) -> "Trace":
+        """Fill per-epoch harvest duty ANTI-correlated with load.
+
+        I/O links are idle when request load is low, so each epoch lends
+        ``duty_max * (1 - rps / peak_rps)`` of its time: zero at the
+        trace's peak epoch, approaching ``duty_max`` at a dead-idle one.
+        ``duty_max=0`` clears harvesting (every epoch back to 0).
+        """
+        if not 0.0 <= duty_max < 1.0:
+            raise ValueError(f"duty_max must be in [0, 1): {duty_max!r}")
+        peak = self.peak_rps
+        return Trace(self.name, tuple(
+            dataclasses.replace(
+                e, harvest_duty=duty_max * (1.0 - (e.rps / peak
+                                                   if peak > 0 else 1.0)))
+            for e in self.epochs))
+
     def to_csv(self, path: str) -> None:
+        harvested = any(e.harvest_duty for e in self.epochs)
         with open(path, "w") as f:
-            f.write("t_s,rps,kappa\n")
+            f.write("t_s,rps,kappa,harvest_duty\n" if harvested
+                    else "t_s,rps,kappa\n")
             for e in self.epochs:
-                f.write(f"{e.t_s:g},{e.rps:g},{e.kappa:g}\n")
+                row = f"{e.t_s:g},{e.rps:g},{e.kappa:g}"
+                if harvested:
+                    row += f",{e.harvest_duty:g}"
+                f.write(row + "\n")
 
 
 def synthetic_diurnal(n_epochs: int = 8, epoch_s: float = 3 * 3600.0,
@@ -122,7 +151,8 @@ def poisson_burst(n_epochs: int = 12, epoch_s: float = 600.0,
 
 def load_csv(path: str, name: str | None = None,
              default_kappa: float = 1.5) -> Trace:
-    """Load ``t_s,rps[,kappa]`` rows (header optional, ``#`` comments).
+    """Load ``t_s,rps[,kappa[,harvest_duty]]`` rows (header optional,
+    ``#`` comments).
 
     Epoch durations come from consecutive start times; the last epoch
     reuses the previous duration (or 60 s for a one-row trace).
@@ -130,9 +160,10 @@ def load_csv(path: str, name: str | None = None,
     The loader validates instead of guessing: ``t_s`` must be strictly
     increasing (a duplicate or out-of-order timestamp would silently
     become a zero- or negative-duration epoch), ``rps`` non-negative,
-    ``kappa >= KAPPA_MIN``, and every field float-parseable.  Violations
-    raise ``ValueError`` naming the 1-based line number.  Only the FIRST
-    non-comment line may be a non-numeric header.
+    ``kappa >= KAPPA_MIN``, ``harvest_duty`` in [0, 1), and every field
+    float-parseable.  Violations raise ``ValueError`` naming the 1-based
+    line number.  Only the FIRST non-comment line may be a non-numeric
+    header.
     """
     rows = []
     seen_any = False
@@ -144,8 +175,8 @@ def load_csv(path: str, name: str | None = None,
             parts = [p.strip() for p in line.split(",")]
             if len(parts) < 2:
                 raise ValueError(
-                    f"{path}:{lineno}: expected t_s,rps[,kappa], "
-                    f"got {line!r}")
+                    f"{path}:{lineno}: expected "
+                    f"t_s,rps[,kappa[,harvest_duty]], got {line!r}")
             try:
                 t = float(parts[0])
             except ValueError:
@@ -161,6 +192,7 @@ def load_csv(path: str, name: str | None = None,
                 rps = float(parts[1])
                 kappa = (float(parts[2]) if len(parts) > 2
                          else default_kappa)
+                duty = float(parts[3]) if len(parts) > 3 else 0.0
             except ValueError as e:
                 raise ValueError(f"{path}:{lineno}: {e}") from None
             if rows and t <= rows[-1][1][0]:
@@ -176,19 +208,23 @@ def load_csv(path: str, name: str | None = None,
                 raise ValueError(
                     f"{path}:{lineno}: kappa {kappa:g} below the "
                     f"{KAPPA_MIN:g} floor")
-            rows.append((lineno, (t, rps, kappa)))
+            if not 0.0 <= duty < 1.0:
+                raise ValueError(
+                    f"{path}:{lineno}: harvest_duty {duty:g} outside "
+                    f"[0, 1)")
+            rows.append((lineno, (t, rps, kappa, duty)))
     if not rows:
         raise ValueError(f"no data rows in trace CSV {path!r}")
     rows = [r for _, r in rows]
     epochs = []
-    for i, (t, rps, kappa) in enumerate(rows):
+    for i, (t, rps, kappa, duty) in enumerate(rows):
         if i + 1 < len(rows):
             dur = rows[i + 1][0] - t
         elif epochs:
             dur = epochs[-1].dur_s
         else:
             dur = 60.0
-        epochs.append(Epoch(t, dur, rps, kappa))
+        epochs.append(Epoch(t, dur, rps, kappa, duty))
     if name is None:
         name = os.path.splitext(os.path.basename(path))[0]
     return Trace(name, tuple(epochs))

@@ -1,0 +1,98 @@
+"""Lint: tests must not mutate the global design/workload registries.
+
+Every ``register_design`` / ``register_workload`` call in ``tests/``
+must sit lexically inside a ``with ... scoped_registry():`` block, so a
+test failure can never leak a registered design into later tests.  The
+walker is AST-based (a grep would miss multi-line calls and flag
+comments); a call that is PROVABLY safe outside a scope -- an
+idempotent re-register or one asserted to raise -- opts out with a
+trailing ``# lint: outside-registry-ok`` comment on the call line.
+"""
+
+import ast
+import pathlib
+
+import pytest
+
+REGISTRY_CALLS = {"register_design", "register_workload"}
+OPT_OUT = "lint: outside-registry-ok"
+TESTS_DIR = pathlib.Path(__file__).parent
+
+
+def _callee(func) -> str | None:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _violations(path: pathlib.Path, src: str | None = None) -> list[str]:
+    """``file:line`` for each registry mutation outside scoped_registry()."""
+    src = path.read_text() if src is None else src
+    lines = src.splitlines()
+    found: list[str] = []
+
+    class Walker(ast.NodeVisitor):
+        def __init__(self):
+            self.scoped_depth = 0
+
+        def visit_With(self, node):
+            scoped = any(
+                isinstance(item.context_expr, ast.Call)
+                and _callee(item.context_expr.func) == "scoped_registry"
+                for item in node.items)
+            self.scoped_depth += scoped
+            self.generic_visit(node)
+            self.scoped_depth -= scoped
+
+        def visit_Call(self, node):
+            span = lines[node.lineno - 1:(node.end_lineno or node.lineno)]
+            if (_callee(node.func) in REGISTRY_CALLS
+                    and self.scoped_depth == 0
+                    and not any(OPT_OUT in l for l in span)):
+                found.append(f"{path.name}:{node.lineno}")
+            self.generic_visit(node)
+
+    Walker().visit(ast.parse(src, str(path)))
+    return found
+
+
+def test_registry_mutations_are_scoped():
+    bad = [v for p in sorted(TESTS_DIR.glob("*.py"))
+           for v in _violations(p)]
+    assert not bad, (
+        "registry mutated outside scoped_registry() -- wrap in "
+        "`with coaxial.scoped_registry():` or mark the line with "
+        f"`# {OPT_OUT}`: " + ", ".join(bad))
+
+
+class TestLinterItself:
+    """The linter must actually catch violations, or the lint is a no-op."""
+
+    def test_flags_unscoped_call(self):
+        src = ("from repro.core import coaxial\n"
+               "def test_x():\n"
+               "    coaxial.register_design(D)\n")
+        assert _violations(pathlib.Path("fake.py"), src) == ["fake.py:3"]
+
+    def test_scoped_and_opted_out_pass(self):
+        src = ("def test_x():\n"
+               "    with coaxial.scoped_registry():\n"
+               "        coaxial.register_design(D)\n"
+               "        register_workload(W)\n"
+               f"    register_design(D)  # {OPT_OUT}\n")
+        assert _violations(pathlib.Path("fake.py"), src) == []
+
+    def test_nested_with_still_scoped(self):
+        src = ("def test_x():\n"
+               "    with coaxial.scoped_registry():\n"
+               "        with pytest.raises(ValueError):\n"
+               "            coaxial.register_design(D)\n")
+        assert _violations(pathlib.Path("fake.py"), src) == []
+
+    def test_bare_name_and_multiline_call_flagged(self):
+        src = ("def test_x():\n"
+               "    register_workload(\n"
+               "        W)\n")
+        assert _violations(pathlib.Path("fake.py"), src) == ["fake.py:2"]

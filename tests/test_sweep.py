@@ -181,12 +181,13 @@ class TestRegistry:
 
     def test_duplicate_idempotent_or_rejected(self):
         # Re-registering the SAME design is an idempotent no-op...
-        assert coaxial.register_design(COAXIAL_4X) is COAXIAL_4X
+        assert coaxial.register_design(
+            COAXIAL_4X) is COAXIAL_4X  # lint: outside-registry-ok
         # ...but a DIFFERENT design under an existing name still raises
         # (silent shadowing) unless explicitly overwritten.
         impostor = dataclasses.replace(COAXIAL_4X, llc_mb_per_core=9.0)
         with pytest.raises(ValueError):
-            coaxial.register_design(impostor)
+            coaxial.register_design(impostor)  # lint: outside-registry-ok
         with coaxial.scoped_registry():
             assert coaxial.register_design(
                 impostor, overwrite=True) is impostor

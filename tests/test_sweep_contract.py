@@ -1,0 +1,124 @@
+"""Axis-kind contract: every registered sweep-axis kind drives one tiny
+grid through the real solvers and honours the same selection API.
+
+One parametrized case per kind -- design, iface_lat, n_active,
+design_field (including the harvest pair), workload_field, queue_model
+on the cpu target; channel_field (including the harvest pair) on the
+memsim target under BOTH engines -- plus a completeness guard so a
+future axis kind cannot ship without a contract case here.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import coaxial, memsim, queuelut, sweepspec
+from repro.core.coaxial import COAXIAL_4X, DDR_BASELINE
+
+#: (axis name, values, expected kind) -- one per CPU-target axis kind,
+#: with the harvest design fields riding as extra design_field cases.
+CPU_AXES = [
+    ("iface_lat_ns", (None, 50.0), sweepspec.KIND_IFACE),
+    ("n_active", (4, 12), sweepspec.KIND_N_ACTIVE),
+    ("dram_channels", (8.0, 10.0), sweepspec.KIND_DESIGN_FIELD),
+    ("harvest_duty", (0.0, 0.5), sweepspec.KIND_DESIGN_FIELD),
+    ("harvest_bw_gbps", (0.0, 38.4), sweepspec.KIND_DESIGN_FIELD),
+    ("mpki", (5.0, 20.0), sweepspec.KIND_WORKLOAD_FIELD),
+]
+
+
+class TestCpuAxisContract:
+    @pytest.mark.parametrize("name,values,kind", CPU_AXES,
+                             ids=[c[0] for c in CPU_AXES])
+    def test_axis_solves_and_selects(self, name, values, kind):
+        spec = sweepspec.sweep_spec(design=(DDR_BASELINE, COAXIAL_4X),
+                                    **{name: values})
+        ax = spec.axis(name)
+        assert ax.kind == kind
+        assert ax.coords == values
+        sw = spec.solve(queue_model="closed_form")
+        assert sw.axis_names == ("design", name)
+        assert sw.results.ipc.shape == (2, len(values), len(sw.names))
+        assert np.isfinite(sw.results.ipc).all()
+        # sel() drops exactly the pinned axis and slices every leaf.
+        sub = sw.sel(**{name: values[-1]})
+        assert sub.axis_names == ("design",)
+        np.testing.assert_array_equal(sub.results.ipc,
+                                      sw.results.ipc[:, -1])
+        # ... and the design axis selects by name, dropping to a
+        # zero-axis result with only the workload dimension left.
+        one = sub.sel(design="coaxial-4x")
+        assert one.axis_names == ()
+        assert one.results.ipc.shape == (len(sw.names),)
+        np.testing.assert_array_equal(one.results.ipc,
+                                      sw.results.ipc[1, -1])
+
+    def test_design_axis_prepends_baseline(self):
+        sw = sweepspec.sweep_spec(design=(COAXIAL_4X,)).solve()
+        assert sw.axis("design").coords[0] == DDR_BASELINE.name
+
+    def test_queue_model_axis_stacks_backends(self):
+        lut = queuelut.build_queue_lut(
+            rho=(0.2, 0.6), kappa=(1.0, 2.0), outstanding=(8.0, 64.0),
+            eta=(1.0, 1.4), steps=4_000)
+        spec = sweepspec.sweep_spec(
+            design=(DDR_BASELINE, COAXIAL_4X),
+            queue_model=("closed_form", "memsim"))
+        assert spec.axis("queue_model").kind == sweepspec.KIND_QUEUE_MODEL
+        sw = spec.solve(lut=lut)
+        assert sw.axis_names == ("design", "queue_model")
+        closed = sw.sel(queue_model="closed_form")
+        mem = sw.sel(queue_model="memsim")
+        assert closed.results.ipc.shape == mem.results.ipc.shape
+        # Different backends, different queue law -- the stacked cells
+        # must not be copies of one pass.
+        assert not np.allclose(closed.results.queue_ns,
+                               mem.results.queue_ns)
+        assert sw.lut is lut
+
+
+class TestChannelAxisContract:
+    @pytest.mark.parametrize("engine", memsim.ENGINES)
+    def test_channel_axes_one_trace_per_engine(self, engine):
+        # Width 22 (11 x 2 x 1) is unique to this test, so the
+        # one-trace-per-grid pin is exact for BOTH counters.
+        spec = coaxial.distribution_spec(
+            rho=tuple(np.linspace(0.2, 0.8, 11).round(3)),
+            harvest_duty=(0.0, 0.4),
+            harvest_bw_gbps=(38.4,))
+        assert spec.target == "memsim"
+        for ax in spec.axes:
+            assert ax.kind == sweepspec.KIND_CHANNEL_FIELD
+        other = [e for e in memsim.ENGINES if e != engine][0]
+        before = {e: memsim.sim_trace_count(e) for e in memsim.ENGINES}
+        sw = spec.solve(steps=19_000, engine=engine)
+        assert memsim.sim_trace_count(engine) == before[engine] + 1
+        assert memsim.sim_trace_count(other) == before[other]
+        assert sw.shape == (11, 2, 1)
+        assert sw.engine == engine
+        # sel() pins coordinates tolerantly and drops axes.
+        sub = sw.sel(harvest_duty=0.4)
+        assert sub.axis_names == ("rho", "harvest_bw_gbps")
+        cell = sw.cell(rho=0.5, harvest_duty=0.0)
+        assert np.isfinite(float(cell.mean_ns))
+        # curve() keeps the one unpinned axis, in axis order.
+        x, y = sw.curve("rho", harvest_duty=0.0, harvest_bw_gbps=38.4)
+        assert x.shape == y.shape == (11,)
+
+
+def test_every_axis_kind_has_a_contract_case():
+    """A new KIND_* constant must gain a case in this file."""
+    registered = {v for k, v in vars(sweepspec).items()
+                  if k.startswith("KIND_")}
+    covered = ({kind for _, _, kind in CPU_AXES}
+               | {sweepspec.KIND_DESIGN, sweepspec.KIND_QUEUE_MODEL,
+                  sweepspec.KIND_CHANNEL_FIELD})
+    assert covered == registered
+
+
+def test_harvest_axes_are_first_class():
+    """The harvest pair sweeps on BOTH targets without special cases."""
+    for f in ("harvest_duty", "harvest_bw_gbps"):
+        assert f in sweepspec.DESIGN_FIELDS
+        assert f in sweepspec.CHANNEL_FIELDS
+        assert f in sweepspec.AXIS_NAMES
+        assert sweepspec._kind_of(f) == sweepspec.KIND_DESIGN_FIELD
