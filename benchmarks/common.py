@@ -36,6 +36,22 @@ def enable_compile_cache() -> str | None:
     return path
 
 
+def enable_lut_cache() -> str | None:
+    """Surface the persistent QueueLUT store (the DES-side warm start).
+
+    ``REPRO_LUT_CACHE`` names a directory; when set, every DES-built
+    :class:`repro.core.queuelut.QueueLUT` surface is persisted there and
+    later sessions read it back bit-identically instead of re-running
+    the simulation (see :mod:`repro.core.lutstore`).  The store is read
+    directly by ``queuelut.resolve_lut`` -- this helper only resolves
+    (and creates) the directory so ``run.py`` can record it in the
+    BENCH trajectory point, mirroring :func:`enable_compile_cache`.
+    """
+    from repro.core import lutstore
+    root = lutstore.cache_dir()
+    return None if root is None else str(root)
+
+
 def _engines() -> tuple:
     """The memsim engines (lazy import: a third engine added to memsim
     is budgetable here without touching this module)."""

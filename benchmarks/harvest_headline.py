@@ -132,8 +132,10 @@ def drift_row(steps: int | None = None,
     h4x = dataclasses.replace(
         coaxial.COAXIAL_4X, name="coaxial-4x+harvest",
         harvest_duty=duty, harvest_bw_gbps=queuelut.HARVEST_REF_BW_GBPS)
-    lut = queuelut.build_queue_lut(steps=steps, engine=engine,
-                                  harvest=(0.0, duty))
+    # Store-backed: with $REPRO_LUT_CACHE warm this two-point-duty
+    # surface is a file read, not a DES run.
+    lut = queuelut.resolve_lut(steps=steps, engine=engine,
+                               harvest=(0.0, duty))
     gm = {}
     for qm in ("closed_form", "memsim"):
         sw = coaxial.sweep(

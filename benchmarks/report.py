@@ -201,6 +201,52 @@ def serving_table(arch: str = "stablelm-1.6b",
     return "\n".join(lines)
 
 
+def lut_table() -> str:
+    """LUT store economics + grid convergence: cold/warm build rows, the
+    grid ladder (interpolation error + fixed-point drift vs grid size),
+    and the adaptive refinement trajectory with its <1% final-step
+    convergence line -- the LUT-resolution endgame rendered."""
+    from benchmarks.lut_convergence import bench_budget, cold_warm, \
+        ladder_rows, refine_history
+    steps, engine = bench_budget()
+    cw = cold_warm()
+    lines = [f"Store: cold build {cw['cold_s']:.2f}s vs warm resolution "
+             f"{cw['warm_s']:.3f}s ({engine} engine, {steps} ns/cell); "
+             f"warm DES traces {cw['warm_traces']}, bit-identical: "
+             f"{'yes' if cw['bitident'] else 'NO'}.", "",
+             "| grid | cells | interp err (max) | gm drift | "
+             "token-p99 drift |",
+             "|---|---|---|---|---|"]
+    for r in ladder_rows(cw["lut"], steps, engine):
+        label = "full" if r["stride"] == 1 else f"stride {r['stride']}"
+        lines.append(
+            f"| {label} | {r['cells']} | {r['interp_err_max']:.4f} | "
+            f"{r['gm_drift_pct']:+.2f}% | {r['tok99_drift_pct']:+.2f}% |")
+    hist = refine_history(steps, engine)
+    lines += ["", "| refine round | cells | geomean speedup | "
+              "token p99 ms | worst probe err | step delta |",
+              "|---|---|---|---|---|---|"]
+    for r in hist:
+        delta = ("" if "d_geomean" not in r else
+                 f"gm {100 * r['d_geomean']:.2f}% / "
+                 f"p99 {100 * r['d_token_p99']:.2f}%")
+        lines.append(
+            f"| {r['round']} | {r['cells']} | "
+            f"{r['geomean_speedup']:.4f} | {r['token_p99_ms']:.1f} | "
+            f"{r['worst_err']:.3f} | {delta} |")
+    final = hist[-1]
+    if final["converged"]:
+        lines += ["", f"Converged: final refinement step moved the "
+                  f"geomean speedup {100 * final.get('d_geomean', 0.0):.2f}% "
+                  f"and token p99 {100 * final.get('d_token_p99', 0.0):.2f}% "
+                  f"(each < 1%)."]
+    else:
+        lines += ["", "NOT converged within the round budget "
+                  f"(last step: gm {100 * final.get('d_geomean', 0.0):.2f}%, "
+                  f"p99 {100 * final.get('d_token_p99', 0.0):.2f}%)."]
+    return "\n".join(lines)
+
+
 def _dirty_index(name: str) -> int:
     """``BENCH_<rev>-dirty<n>.json`` -> n; the clean base point -> 0."""
     import re
@@ -354,7 +400,7 @@ def main():
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "coaxial",
                              "pareto", "drift", "harvest", "serving",
-                             "bench"])
+                             "lut", "bench"])
     ap.add_argument("--variants", nargs=2, metavar=("ARCH", "SHAPE"),
                     default=None)
     ap.add_argument("--max-regress", type=float, default=None,
@@ -393,6 +439,10 @@ def main():
     if args.section in ("all", "serving"):
         print("### Serving capacity plan\n")
         print(serving_table())
+        print()
+    if args.section in ("all", "lut"):
+        print("### QueueLUT store & grid convergence\n")
+        print(lut_table())
         print()
     if args.section in ("all", "bench"):
         print("### Benchmark trajectory (BENCH_<rev>.json diff)\n")

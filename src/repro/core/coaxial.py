@@ -913,6 +913,7 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
                        steps: int = 200_000, seed: int = 0,
                        warmup: int | None = None, reps: int = 1,
                        engine: str = "timestep", devices=None,
+                       stream_ids=None, chunk: int | None = None,
                        **axes) -> DistributionSweepResult:
     """Run the DES over a named-axis grid of channel parameters.
 
@@ -956,9 +957,14 @@ def distribution_sweep(spec: SweepSpec | None = None, *,
         raise TypeError("pass a spec OR axis keywords, not both")
     flat = build_flat_memsim(spec, base=base)
     warmup = memsim.default_warmup(steps) if warmup is None else int(warmup)
+    # ``stream_ids``/``chunk`` pass straight through to the simulator:
+    # the canonical stream contract of QueueLUT-store builds (per-cell
+    # ids over the C-order flattened grid, width-pinned chunk schedule
+    # -- see memsim.simulate_cells and queuelut.cell_stream_ids).
     stats = memsim.simulate_cells(
         flat["cha"], overrides=flat["overrides"], steps=steps, seed=seed,
-        warmup=warmup, reps=reps, engine=engine, devices=devices)
+        warmup=warmup, reps=reps, engine=engine, devices=devices,
+        stream_ids=stream_ids, chunk=chunk)
     return DistributionSweepResult(
         axes=spec.axes, stats=stats.reshape(*spec.shape),
         base=base if base is not None else ChannelConfig(rho=0.5),

@@ -103,8 +103,10 @@ def resolve_queue_lut(queue_model: str, lut=None, *,
 
     ``closed_form`` -> ``None`` (the calibrated ``queueing`` closed form);
     ``memsim`` -> the given :class:`repro.core.queuelut.QueueLUT`, or the
-    cached default surface when none is passed (built by the DES's
-    per-request event engine at the default grids).  ``harvest=True``
+    default surface when none is passed (built by the DES's per-request
+    event engine at the default grids, resolved through the persistent
+    LUT store -- memory -> ``$REPRO_LUT_CACHE`` -> build; a warm store
+    read costs zero DES traces).  ``harvest=True``
     means the solve needs the harvest axis: the default build gains it,
     and an explicitly passed 4-D surface is rejected rather than
     silently dropping the mechanism.  The runtime import keeps

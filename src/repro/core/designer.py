@@ -358,8 +358,10 @@ def optimize_design(*, area_budget: float = 1.2,
     serving workload whose wave-model TOKEN p99 carries the SLO (its
     derived LLM workload joins the Table-4 mix); ``slo_ms=None`` or
     ``arch=None`` drops the constraint.  ``lut``/``steps``/``engine``
-    control the QueueLUT surface (default: the cached default grid at
-    :func:`default_steps`); ``verify_steps`` the final DES
+    control the QueueLUT surface (default: the default grid at
+    :func:`default_steps`, resolved through the persistent LUT store --
+    with a warm ``$REPRO_LUT_CACHE`` the optimizer starts without
+    running the DES at all); ``verify_steps`` the final DES
     re-verification budget (default: the LUT's).
 
     ``harvest_bw_gbps > 0`` makes idle-I/O harvesting (arXiv 2511.12349)

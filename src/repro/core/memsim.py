@@ -219,6 +219,53 @@ def _event_chunk_len(n: int) -> int:
     while c < _EV_CHUNK_MAX and c * 2 * n <= _EV_CHUNK_ELEMS:
         c *= 2
     return c
+
+
+def canonical_chunk(engine: str) -> int:
+    """The width-independent chunk length of the canonical stream contract.
+
+    The adaptive chunk schedule (:func:`_ts_chunk_len` /
+    :func:`_event_chunk_len`) keys the draw sequences on the batch width,
+    so two batches of different widths never share streams even when
+    their lanes share ``stream_ids``.  Callers that need a lane's result
+    to be REPRODUCIBLE AT ANY BATCH WIDTH (the QueueLUT store's
+    incremental builds: a cell simulated alone must equal the same cell
+    inside the full-grid batch, bit for bit) pin
+    ``chunk=canonical_chunk(engine)`` -- each engine's minimum, which is
+    also what the adaptive heuristic picks at full LUT-grid widths, so
+    pinning costs nothing where it matters and only adds dispatches on
+    small probe batches.
+    """
+    _check_engine(engine)
+    return _TS_CHUNK_MIN if engine == "timestep" else _EV_CHUNK_MIN
+
+
+#: Odd (golden-ratio) constant mixing the replica index into a cell's
+#: 32-bit stream id: ``lane_stream = (stream_ids[cell] + rep * MIX) mod
+#: 2**32`` -- a bijection of the id space per replica, so replicas of one
+#: cell draw independent streams and the mapping needs no second key.
+_STREAM_REP_MIX = 0x9E3779B9
+
+
+def _lane_streams(n: int, reps: int, stream_ids):
+    """Per-lane stream indices for the flattened ``(reps x n)`` batch.
+
+    ``stream_ids=None`` keeps the positional contract (global lane index
+    ``rep * n + cell``); an explicit ``(n,)`` uint32 array keys each
+    lane's threefry streams by the CALLER'S id instead -- the content
+    half of the canonical stream contract (see :func:`canonical_chunk`
+    for the schedule half).
+    """
+    if stream_ids is None:
+        return jnp.arange(n * reps, dtype=jnp.int32)
+    sid = np.asarray(stream_ids)
+    if sid.shape != (n,):
+        raise ValueError(f"stream_ids must have shape ({n},) -- one id "
+                         f"per cell; got {sid.shape}")
+    sid = sid.astype(np.uint64)
+    rep = np.repeat(np.arange(reps, dtype=np.uint64), n)
+    mixed = (np.tile(sid, reps) + rep * _STREAM_REP_MIX) & 0xFFFFFFFF
+    return jnp.asarray(mixed.astype(np.uint32))
 #: Event engine: one MMPP sojourn is simulated per this many candidates
 #: (the modulating chain is ~100x slower than arrivals, so the chain
 #: stays a rounding error of the candidate budget, and sizing it from
@@ -1052,16 +1099,18 @@ def _accumulate_chunks(dispatch, n_chunks: int, n: int) -> np.ndarray:
     return hist[:-1].reshape(n, N_BINS).astype(np.float64)
 
 
-def _run_timestep(cha, ov, steps, seed, warmup, ndev, n_real, pad):
+def _run_timestep(cha, ov, steps, seed, warmup, ndev, n_real, pad,
+                  lane_r, chunk=None):
     n_tot = n_real + pad
     # Chunk length derives from the UNPADDED width: the chunk schedule is
     # part of the stream contract, padding is a device-count artifact.
-    chunk = _ts_chunk_len(n_real)
+    # An explicit ``chunk`` pins the schedule width-independently (the
+    # canonical stream contract, see :func:`canonical_chunk`).
+    chunk = _ts_chunk_len(n_real) if chunk is None else int(chunk)
     n_chunks = -(-steps // chunk)
     ckeys = np.asarray(jax.random.split(jax.random.PRNGKey(seed), n_chunks))
     record = np.zeros(n_chunks * chunk, np.float32)
     record[warmup:steps] = 1.0
-    lane_r = jnp.arange(n_real, dtype=jnp.int32)
     terms = {**_scan_terms_jit(cha, ov), **_harvest_scan_terms_jit(cha, ov)}
     state = (jnp.zeros(n_tot), jnp.ones(n_tot), jnp.zeros(n_tot))
     fn = _ts_kernel(ndev, n_tot, n_real)
@@ -1085,14 +1134,14 @@ def _run_timestep(cha, ov, steps, seed, warmup, ndev, n_real, pad):
     return _accumulate_chunks(dispatch, n_chunks, n_tot)[:n_real]
 
 
-def _run_event(cha, ov, steps, seed, warmup, events, ndev, n_real, pad):
+def _run_event(cha, ov, steps, seed, warmup, events, ndev, n_real, pad,
+               lane_r, chunk=None):
     n_tot = n_real + pad
-    chunk = _event_chunk_len(n_real)
+    chunk = _event_chunk_len(n_real) if chunk is None else int(chunk)
     n_chunks = -(-events // chunk)
     n_sojourns = max(64, (n_chunks * chunk) // _SOJOURN_DIV)
     phase_key, chunk_root = jax.random.split(jax.random.PRNGKey(seed))
     keys = jax.random.split(chunk_root, n_chunks)
-    lane_r = jnp.arange(n_real, dtype=jnp.int32)
     tabs = _event_tables_jit(cha, ov, lane_r, phase_key,
                              n_sojourns=n_sojourns)
     terms = _scan_terms_jit(cha, ov)
@@ -1143,7 +1192,9 @@ def simulate_cells(cha: ChannelArrays, *, overrides=None,
                    steps: int = 200_000, seed: int = 0,
                    warmup: int | None = None, reps: int = 1,
                    engine: str = "timestep", events: int | None = None,
-                   devices=None, keep_reps: bool = False) -> LatencyStats:
+                   devices=None, keep_reps: bool = False,
+                   stream_ids=None, chunk: int | None = None
+                   ) -> LatencyStats:
     """Simulate N flattened cells in one jitted batch.
 
     ``cha`` leaves are ``(N,)``; ``overrides`` maps channel fields to
@@ -1174,6 +1225,16 @@ def simulate_cells(cha: ChannelArrays, *, overrides=None,
     Results are exactly reproducible per ``(engine, seed, budget, N)``;
     the two engines draw different streams and agree statistically, not
     bitwise.
+
+    ``stream_ids`` (an ``(N,)`` uint32 array) replaces the positional
+    lane-stream keying with CALLER-OWNED ids, and ``chunk`` pins the
+    chunk schedule independently of the batch width (see
+    :func:`canonical_chunk`).  Together they make a cell's histogram a
+    pure function of ``(its channel values, its stream id, seed, budget,
+    engine)`` -- independent of which OTHER cells share the batch -- the
+    contract the QueueLUT store's incremental builds are built on
+    (``tests/test_lutstore.py`` pins it bitwise).  Both default to the
+    historical positional/adaptive behavior.
     """
     _check_engine(engine)
     n = int(np.shape(cha.rho)[0])
@@ -1201,14 +1262,17 @@ def simulate_cells(cha: ChannelArrays, *, overrides=None,
     ov = _nan_overrides(n_real)
     ov.update({f: tile(v) for f, v in (overrides or {}).items()})
     cha = ChannelArrays(*(tile(leaf) for leaf in cha))
+    lane_r = _lane_streams(n, reps, stream_ids)
+    if chunk is not None and int(chunk) < 1:
+        raise ValueError(f"chunk must be >= 1; got {chunk}")
     if engine == "timestep":
         hist = _run_timestep(cha, ov, int(steps), seed, warmup,
-                             ndev, n_real, pad)
+                             ndev, n_real, pad, lane_r, chunk)
     else:
         events = (events_for_steps(steps) if events is None
                   else max(1, int(events)))
         hist = _run_event(cha, ov, int(steps), seed, warmup, events,
-                          ndev, n_real, pad)
+                          ndev, n_real, pad, lane_r, chunk)
     hist = hist.reshape(reps, n, -1)
     if keep_reps:
         return _stats_from_hist(hist)

@@ -37,13 +37,15 @@ build, bit-identically.  :func:`default_queue_lut` caches it per
 
 from __future__ import annotations
 
-import functools
+import hashlib
+import time
 from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hw
+from repro.core import hw, lutstore
+from repro.core.lutstore import clear_lut_cache  # noqa: F401 -- re-export
 
 #: Default utilization grid: denser near saturation, where the open-loop
 #: hyperbola is steep and linear interpolation would otherwise smear the
@@ -224,6 +226,96 @@ def _check_grid(name, grid, positive: bool = False):
     return tuple(float(v) for v in g)
 
 
+#: Salt of the per-cell stream-id hash (bump to re-draw every surface).
+_CELL_SALT = b"qlut-cell-v1:"
+
+
+def cell_stream_ids(names, coords) -> np.ndarray:
+    """Per-cell uint32 stream ids keyed by the cell's COORDINATES.
+
+    ``names`` are the axis field names, ``coords`` an ``(N, d)`` float64
+    coordinate matrix; the id is the first 32 bits of a sha256 over the
+    exact (hex-formatted) coordinate values.  Keying streams by
+    coordinates instead of batch position -- together with the pinned
+    chunk schedule (``memsim.canonical_chunk``) -- makes every LUT cell's
+    DES result independent of which other cells share the batch: a grid
+    grown incrementally (``build_queue_lut(base_lut=...)``) is bit-
+    identical to the same grid built from scratch, and a refinement
+    probe re-simulating one cell reproduces the table entry exactly.
+    """
+    names = tuple(names)
+    coords = np.asarray(coords, np.float64)
+    ids = np.empty(coords.shape[0], np.uint32)
+    for i, row in enumerate(coords):
+        body = ";".join(f"{n}={float(v).hex()}"
+                        for n, v in zip(names, row))
+        h = hashlib.sha256(_CELL_SALT + body.encode()).digest()
+        ids[i] = int.from_bytes(h[:4], "little")
+    return ids
+
+
+def _grid_axes(rho, kappa, outstanding, eta, harvest):
+    """Validate grids; returns the ordered axes dict (+ checked grids)."""
+    rho = _check_grid("rho", rho)
+    kappa = _check_grid("kappa", kappa)
+    outstanding = _check_grid("outstanding", outstanding, positive=True)
+    eta = _check_grid("eta", eta)
+    axes = dict(rho=rho, kappa=kappa, outstanding=outstanding, eta=eta)
+    if harvest is not None:
+        harvest = _check_grid("harvest", harvest)
+        if harvest[0] < 0.0 or harvest[-1] >= 1.0:
+            raise ValueError(f"harvest (duty) grid must lie in [0, 1): "
+                             f"{list(harvest)}")
+        axes["harvest_duty"] = harvest
+    return axes, harvest
+
+
+def _cell_coords(axes: dict) -> np.ndarray:
+    """(N, d) float64 coordinates of the C-order flattened grid --
+    exactly the flat cell order of ``coaxial.distribution_sweep``."""
+    mesh = np.meshgrid(*(np.asarray(g, np.float64) for g in axes.values()),
+                       indexing="ij")
+    return np.stack([m.ravel() for m in mesh], axis=-1)
+
+
+def _base_cell_map(axes: dict, base_lut: QueueLUT):
+    """(present mask, base flat indices) of target cells found in a base.
+
+    A target cell is PRESENT when every coordinate matches a base grid
+    point exactly (compared in float32 -- the dtype the grids live at in
+    the pytree).  Returns the boolean ``(N,)`` mask and, for the present
+    cells, their flat C-order indices into the base tables.
+    """
+    base_grids = [np.asarray(g) for g in
+                  (base_lut.rho_grid, base_lut.kappa_grid,
+                   base_lut.outstanding_grid, base_lut.eta_grid)]
+    if base_lut.harvest_grid is not None:
+        base_grids.append(np.asarray(base_lut.harvest_grid))
+    if len(base_grids) != len(axes):
+        raise ValueError(
+            "base_lut axis count does not match the target grid: "
+            f"{len(base_grids)} vs {len(axes)} (harvest mismatch?)")
+    shape = tuple(len(g) for g in axes.values())
+    maps = []
+    for tgt, bg in zip(axes.values(), base_grids):
+        tgt32 = np.asarray(tgt, np.float32)
+        m = np.full(len(tgt32), -1, np.int64)
+        for j, v in enumerate(tgt32):
+            hit = np.flatnonzero(bg == v)
+            if hit.size:
+                m[j] = hit[0]
+        maps.append(m)
+    idx = np.stack(np.meshgrid(*(np.arange(s) for s in shape),
+                               indexing="ij"), -1).reshape(-1, len(shape))
+    base_pos = np.stack([maps[a][idx[:, a]] for a in range(len(shape))],
+                        axis=-1)
+    present = (base_pos >= 0).all(axis=-1)
+    base_shape = tuple(len(g) for g in base_grids)
+    flat = (np.ravel_multi_index(base_pos[present].T, base_shape)
+            if present.any() else np.empty(0, np.int64))
+    return present, flat
+
+
 def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
                     outstanding=DEFAULT_OUTSTANDING_GRID,
                     eta=DEFAULT_ETA_GRID, harvest=None,
@@ -231,7 +323,8 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
                     steps: int = DEFAULT_STEPS, seed: int = 0,
                     reps: int = DEFAULT_REPS, base=None,
                     engine: str = DEFAULT_ENGINE,
-                    devices=None) -> QueueLUT:
+                    devices=None, base_lut: QueueLUT | None = None
+                    ) -> QueueLUT:
     """Run ONE batched distribution sweep and reduce it to a QueueLUT.
 
     The whole (rho x kappa x outstanding x eta) grid lowers to one jitted
@@ -243,6 +336,18 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
     flattened cell batch over host devices (``None`` consults
     ``$REPRO_DES_DEVICES``) -- the default 4-D grid is what the sharded
     DES buys, and the tables are bit-identical at any device count.
+
+    Every build runs under the CANONICAL stream contract: each cell's
+    threefry streams are keyed by its coordinates
+    (:func:`cell_stream_ids`) and the chunk schedule is width-pinned
+    (``memsim.canonical_chunk``), so a cell's tables are a pure function
+    of its coordinates + (steps, seed, reps, engine, base channel) --
+    never of the surrounding grid.  That is what makes builds
+    INCREMENTAL: ``base_lut`` (a surface previously built with the SAME
+    build parameters) donates every cell whose coordinates it already
+    covers; only the missing cells are simulated (one batched run) and
+    the tables merged -- bit-identical to building the whole grid from
+    scratch (pinned by ``tests/test_lutstore.py``).
 
     ``harvest`` (a duty grid in [0, 1), e.g.
     :data:`DEFAULT_HARVEST_GRID`) grows the optional 5th axis: the sweep
@@ -269,51 +374,344 @@ def build_queue_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
         (2, 2, 2, 2, 2)
     """
     from repro.core import coaxial, memsim  # runtime: import cycle
-    rho = _check_grid("rho", rho)
-    kappa = _check_grid("kappa", kappa)
-    outstanding = _check_grid("outstanding", outstanding, positive=True)
-    eta = _check_grid("eta", eta)
-    axes = dict(rho=rho, kappa=kappa, outstanding=outstanding, eta=eta)
-    if harvest is not None:
-        harvest = _check_grid("harvest", harvest)
-        if harvest[0] < 0.0 or harvest[-1] >= 1.0:
-            raise ValueError(f"harvest (duty) grid must lie in [0, 1): "
-                             f"{list(harvest)}")
-        axes["harvest_duty"] = harvest
-        if base is None:
-            base = memsim.ChannelConfig(
-                rho=0.5, harvest_bw_gbps=float(harvest_bw_gbps))
-    sw = coaxial.distribution_sweep(
-        **axes, base=base, steps=int(steps), seed=int(seed),
-        reps=int(reps), engine=engine, devices=devices)
-    stats = sw.stats
+    axes, harvest = _grid_axes(rho, kappa, outstanding, eta, harvest)
+    if harvest is not None and base is None:
+        base = memsim.ChannelConfig(
+            rho=0.5, harvest_bw_gbps=float(harvest_bw_gbps))
+    coords = _cell_coords(axes)
+    sids = cell_stream_ids(axes.keys(), coords)
+    chunk = memsim.canonical_chunk(engine)
+    shape = tuple(len(g) for g in axes.values())
+    grids = tuple(axes.values())
+
+    def stat_arrays(stats):
+        return (np.maximum(np.asarray(stats.mean_ns, np.float64)
+                           - hw.DRAM_SERVICE_NS, 0.0),
+                np.maximum(np.asarray(stats.p90_ns, np.float64)
+                           - hw.DRAM_SERVICE_NS, 0.0),
+                np.maximum(np.asarray(stats.p99_ns, np.float64)
+                           - hw.DRAM_SERVICE_NS, 0.0),
+                np.asarray(stats.stdev_ns, np.float64))
+
+    if base_lut is None:
+        sw = coaxial.distribution_sweep(
+            **axes, base=base, steps=int(steps), seed=int(seed),
+            reps=int(reps), engine=engine, devices=devices,
+            stream_ids=sids, chunk=chunk)
+        tables = stat_arrays(sw.stats)
+    else:
+        present, base_flat = _base_cell_map(axes, base_lut)
+        missing = np.flatnonzero(~present)
+        spec = coaxial.distribution_spec(**axes)
+        flat = coaxial.build_flat_memsim(spec, base=base)
+        fresh = None
+        if missing.size:
+            cha = memsim.ChannelArrays(
+                *(np.asarray(leaf)[missing] for leaf in flat["cha"]))
+            ov = {f: np.asarray(v)[missing]
+                  for f, v in flat["overrides"].items()}
+            stats = memsim.simulate_cells(
+                cha, overrides=ov, steps=int(steps), seed=int(seed),
+                warmup=memsim.default_warmup(int(steps)),
+                reps=int(reps), engine=engine, devices=devices,
+                stream_ids=sids[missing], chunk=chunk)
+            fresh = stat_arrays(stats)
+        base_tables = (base_lut.wait_ns, base_lut.p90_wait_ns,
+                       base_lut.p99_wait_ns, base_lut.sigma_ns)
+        tables = []
+        for t, bt in enumerate(base_tables):
+            full = np.empty(coords.shape[0], np.float64)
+            # float32 -> float64 -> float32 round-trips exactly, so
+            # donated cells keep the base surface's bits.
+            full[present] = np.asarray(bt, np.float64).ravel()[base_flat]
+            if fresh is not None:
+                full[missing] = fresh[t]
+            tables.append(full)
+
     to_j = lambda x: jnp.asarray(np.asarray(x, np.float64))
+    wait, p90, p99, sigma = (t.reshape(shape) for t in tables)
     return QueueLUT(
-        rho_grid=to_j(rho), kappa_grid=to_j(kappa),
-        outstanding_grid=to_j(outstanding), eta_grid=to_j(eta),
-        wait_ns=to_j(np.maximum(stats.mean_ns - hw.DRAM_SERVICE_NS, 0.0)),
-        p90_wait_ns=to_j(np.maximum(stats.p90_ns - hw.DRAM_SERVICE_NS, 0.0)),
-        p99_wait_ns=to_j(np.maximum(stats.p99_ns - hw.DRAM_SERVICE_NS, 0.0)),
-        sigma_ns=to_j(stats.stdev_ns),
+        rho_grid=to_j(grids[0]), kappa_grid=to_j(grids[1]),
+        outstanding_grid=to_j(grids[2]), eta_grid=to_j(grids[3]),
+        wait_ns=to_j(wait), p90_wait_ns=to_j(p90),
+        p99_wait_ns=to_j(p99), sigma_ns=to_j(sigma),
         harvest_grid=None if harvest is None else to_j(harvest))
 
 
-@functools.lru_cache(maxsize=None)
+def _store_params(axes: dict, harvest, harvest_bw_gbps, steps, seed,
+                  reps, engine, base) -> dict:
+    """The canonical JSON-able param dict behind a store key.
+
+    ``devices`` is deliberately absent: tables are device-count
+    invariant (``tests/test_shardsim.py`` pins it), so any device layout
+    may share one entry.
+    """
+    import dataclasses
+    base_fields = (None if base is None
+                   else {k: float(v) for k, v in
+                         sorted(dataclasses.asdict(base).items())})
+    return dict(schema="queue_lut",
+                axes={n: list(g) for n, g in axes.items()},
+                harvest_bw_gbps=(float(harvest_bw_gbps)
+                                 if harvest is not None else None),
+                steps=int(steps), seed=int(seed), reps=int(reps),
+                engine=str(engine), base=base_fields)
+
+
+def resolve_lut(*, rho=DEFAULT_RHO_GRID, kappa=DEFAULT_KAPPA_GRID,
+                outstanding=DEFAULT_OUTSTANDING_GRID,
+                eta=DEFAULT_ETA_GRID, harvest=None,
+                harvest_bw_gbps: float = HARVEST_REF_BW_GBPS,
+                steps: int = DEFAULT_STEPS, seed: int = 0,
+                reps: int = DEFAULT_REPS, base=None,
+                engine: str = DEFAULT_ENGINE, devices=None,
+                base_lut: QueueLUT | None = None) -> QueueLUT:
+    """Store-backed :func:`build_queue_lut`: memory -> disk -> simulate.
+
+    The resolution order is (1) the bounded in-process layer, (2) the
+    ``$REPRO_LUT_CACHE`` on-disk store (bit-identical read, zero DES
+    traces), (3) a fresh build -- which is then persisted.  The store key
+    covers every build input plus the mechanism fingerprint (see
+    :mod:`repro.core.lutstore`), so simulator changes rebuild
+    automatically and a warm read can never serve a stale surface.
+
+    ``base_lut`` only matters on a full miss: the build grows the base
+    incrementally instead of starting from scratch (the refinement
+    loop's round-over-round warm start).
+    """
+    from repro.core import memsim
+    axes, harvest = _grid_axes(rho, kappa, outstanding, eta, harvest)
+    if harvest is not None and base is None:
+        base = memsim.ChannelConfig(
+            rho=0.5, harvest_bw_gbps=float(harvest_bw_gbps))
+    key = lutstore.store_key(_store_params(
+        axes, harvest, harvest_bw_gbps, steps, seed, reps, engine, base))
+    lut = lutstore.cache_get(key)
+    if lut is None:
+        lut = lutstore.load(key)
+        if lut is None:
+            lut = build_queue_lut(
+                rho=axes["rho"], kappa=axes["kappa"],
+                outstanding=axes["outstanding"], eta=axes["eta"],
+                harvest=harvest, harvest_bw_gbps=harvest_bw_gbps,
+                steps=steps, seed=seed, reps=reps, base=base,
+                engine=engine, devices=devices, base_lut=base_lut)
+            lutstore.save(key, lut, meta=dict(
+                engine=str(engine), steps=int(steps), seed=int(seed),
+                reps=int(reps),
+                shape=list(np.shape(np.asarray(lut.wait_ns))),
+                harvest=harvest is not None))
+        lutstore.cache_put(key, lut)
+    return lut
+
+
 def default_queue_lut(steps: int = DEFAULT_STEPS, seed: int = 0,
                       reps: int = DEFAULT_REPS,
                       engine: str = DEFAULT_ENGINE,
                       harvest: bool = False) -> QueueLUT:
-    """The shared default-grid surface; built once per (steps, seed,
-    reps, engine, harvest).
+    """The shared default-grid surface, resolved through the LUT store.
 
     This is what ``cpu_model.solve(..., queue_model="memsim")`` uses when
     no explicit LUT is passed (``harvest=True`` when any solved design
     harvests -- the tables gain the :data:`DEFAULT_HARVEST_GRID` axis).
-    The build honours ``$REPRO_DES_DEVICES`` (via ``devices=None``), and
-    the tables are device-count-invariant, so the cache key need not
-    include it.
+    Resolution goes memory -> ``$REPRO_LUT_CACHE`` -> DES build (see
+    :func:`resolve_lut`); the historical unbounded ``lru_cache`` is gone
+    -- the in-process layer is bounded (``lutstore.MEM_CACHE_MAX``) and
+    :func:`clear_lut_cache` empties it.  The build honours
+    ``$REPRO_DES_DEVICES`` (via ``devices=None``), and the tables are
+    device-count-invariant, so the key need not include it.
     """
-    return build_queue_lut(steps=steps, seed=seed, reps=reps,
-                           engine=engine,
-                           harvest=DEFAULT_HARVEST_GRID if harvest
-                           else None)
+    return resolve_lut(steps=steps, seed=seed, reps=reps, engine=engine,
+                       harvest=DEFAULT_HARVEST_GRID if harvest else None)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive grid refinement: the ROADMAP's LUT-resolution endgame.
+# ---------------------------------------------------------------------------
+
+#: The LLM serving anchor whose wave-model token p99 tracks refinement
+#: (the same arch the designer CLI and the drift section anchor on).
+REFINE_ARCH = "mistral-large-123b"
+
+#: Probe anchor: the off-axis coordinates each midpoint is probed at --
+#: a mid-load bursty operating point near the headline designs' fixed
+#: points, where interpolation error actually moves the answers.
+PROBE_ANCHOR = dict(rho=0.74, kappa=1.6, outstanding=24.0, eta=0.60,
+                    harvest_duty=0.0)
+
+#: Intervals whose probe error is below this floor are never bisected --
+#: DES sampling noise, not interpolation error.
+REFINE_ERR_FLOOR = 0.02
+
+
+def headline_metrics(lut: QueueLUT) -> dict:
+    """The two convergence metrics of :func:`refine_queue_lut`.
+
+    ``geomean_speedup``: CoaXiaL-4x over the DDR baseline, geomean over
+    the Table-4 suite, both solved on the MEMSIM backend through ``lut``
+    (the fig7 headline).  ``token_p99_ms``: the capacity planner's
+    wave-model token p99 for :data:`REFINE_ARCH` on CoaXiaL-4x, composed
+    from the solved ``latency_p99_ns``/``ipc`` exactly as the designer's
+    in-loop SLO does.  Both are pure LUT-backed fixed-point solves -- no
+    DES runs, so a refinement round costs two solves plus the probe
+    batch.
+    """
+    from repro.core import cpu_model
+    from repro.core.designer import _wave_geometry
+    from repro.serving.demand import (DEFAULT_BATCH, DEFAULT_CONTEXT,
+                                      llm_workload)
+    wls = tuple(cpu_model.WORKLOADS) + (llm_workload(REFINE_ARCH),)
+    res = cpu_model.solve(cpu_model.COAXIAL_4X, queue_model="memsim",
+                          lut=lut, workloads=wls)
+    ref = cpu_model.solve(cpu_model.DDR_BASELINE, queue_model="memsim",
+                          lut=lut, workloads=wls)
+    n_suite = len(cpu_model.WORKLOADS)
+    sp = (np.asarray(res.ipc, np.float64)[:n_suite]
+          / np.asarray(ref.ipc, np.float64)[:n_suite])
+    waves, model_coef = _wave_geometry(REFINE_ARCH, DEFAULT_BATCH,
+                                       DEFAULT_CONTEXT)
+    tok99_s = max(waves * float(res.latency_p99_ns[-1]) * 1e-9,
+                  model_coef / float(res.ipc[-1]))
+    return dict(geomean_speedup=float(np.exp(np.mean(np.log(sp)))),
+                token_p99_ms=tok99_s * 1e3)
+
+
+def _midpoint(axis: str, lo: float, hi: float) -> float:
+    """Interval midpoint in the axis's interpolation space (geometric
+    for the log-interpolated ``outstanding`` axis, arithmetic else)."""
+    if axis == "outstanding":
+        return float(np.sqrt(lo * hi))
+    return 0.5 * (lo + hi)
+
+
+def refine_queue_lut(*, rho=None, kappa=None, outstanding=None,
+                     eta=None, harvest=None,
+                     harvest_bw_gbps: float = HARVEST_REF_BW_GBPS,
+                     steps: int = DEFAULT_STEPS, seed: int = 0,
+                     reps: int = DEFAULT_REPS,
+                     engine: str = DEFAULT_ENGINE, devices=None,
+                     tol: float = 0.01, max_rounds: int = 4,
+                     metrics=headline_metrics):
+    """Adaptively refine the LUT grid until the headlines stop moving.
+
+    Starting from the given grids (default: every-other-point
+    coarsenings of the default grids, so the loop has real work), each
+    round:
+
+    1. resolves the current grid through the store
+       (:func:`resolve_lut`), growing the previous round's surface
+       INCREMENTALLY -- only new cells run the DES;
+    2. evaluates the convergence metrics (default
+       :func:`headline_metrics`: fig7 geomean speedup + wave-model token
+       p99) and STOPS when both moved less than ``tol`` (relative)
+       against the previous round;
+    3. otherwise probes every interval midpoint per axis (off-axis
+       coordinates pinned at :data:`PROBE_ANCHOR`) against ONE batched
+       direct DES run, and bisects the worst-error interval of each axis
+       whose error clears :data:`REFINE_ERR_FLOOR`.
+
+    This operationalizes the ROADMAP's "push the grid finer until the
+    interpolated fixed point is insensitive" as a testable criterion.
+    Returns ``(lut, history)`` -- one history dict per round with the
+    grids' shape, cell count, metric values, relative deltas, worst
+    probe error, and wall-clock; ``history[-1]["converged"]`` says
+    whether the loop stopped on the criterion (vs running out of
+    rounds).  ``report --section lut`` renders the trajectory.
+    """
+    from repro.core import memsim  # runtime: import cycle
+    grids = dict(
+        rho=tuple(rho) if rho is not None else DEFAULT_RHO_GRID[::2],
+        kappa=(tuple(kappa) if kappa is not None
+               else DEFAULT_KAPPA_GRID[::2]),
+        outstanding=(tuple(outstanding) if outstanding is not None
+                     else DEFAULT_OUTSTANDING_GRID[::2]),
+        eta=tuple(eta) if eta is not None else DEFAULT_ETA_GRID[::2])
+    if harvest is not None:
+        grids["harvest_duty"] = tuple(harvest)
+    history: list[dict] = []
+    lut, prev = None, None
+    for rnd in range(int(max_rounds)):
+        t0 = time.perf_counter()
+        lut = resolve_lut(
+            rho=grids["rho"], kappa=grids["kappa"],
+            outstanding=grids["outstanding"], eta=grids["eta"],
+            harvest=grids.get("harvest_duty"),
+            harvest_bw_gbps=harvest_bw_gbps, steps=steps, seed=seed,
+            reps=reps, engine=engine, devices=devices, base_lut=lut)
+        m = metrics(lut)
+        row = dict(round=rnd,
+                   shape=tuple(len(g) for g in grids.values()),
+                   cells=int(np.prod([len(g) for g in grids.values()])),
+                   converged=False, worst_err=0.0,
+                   seconds=round(time.perf_counter() - t0, 3), **m)
+        if prev is not None:
+            row["d_geomean"] = abs(m["geomean_speedup"]
+                                   / prev["geomean_speedup"] - 1.0)
+            row["d_token_p99"] = abs(m["token_p99_ms"]
+                                     / prev["token_p99_ms"] - 1.0)
+            if (row["d_geomean"] < tol and row["d_token_p99"] < tol):
+                row["converged"] = True
+                history.append(row)
+                break
+        prev = m
+
+        # Probe every interval midpoint, one batched DES run (canonical
+        # streams: the probes are reproducible cell-for-cell).
+        probes, owners = [], []
+        for axis, grid in grids.items():
+            for j in range(len(grid) - 1):
+                c = dict(PROBE_ANCHOR)
+                if "harvest_duty" not in grids:
+                    c.pop("harvest_duty")
+                c[axis] = _midpoint(axis, grid[j], grid[j + 1])
+                probes.append(c)
+                owners.append((axis, j))
+        names = tuple(grids)
+        coords = np.asarray([[p[n] for n in names] for p in probes])
+        extra = ({"harvest_bw_gbps": float(harvest_bw_gbps)}
+                 if "harvest_duty" in grids else {})
+        cha = memsim.stack_channels(
+            [memsim.ChannelConfig(**p, **extra) for p in probes])
+        stats = memsim.simulate_cells(
+            cha, steps=int(steps), seed=int(seed), reps=int(reps),
+            engine=engine, devices=devices,
+            stream_ids=cell_stream_ids(names, coords),
+            chunk=memsim.canonical_chunk(engine))
+        des_wait = np.maximum(
+            np.asarray(stats.mean_ns, np.float64) - hw.DRAM_SERVICE_NS,
+            0.0)
+        lut_wait = np.asarray([float(lut.wait(
+            p["rho"], p["kappa"], p["outstanding"], p["eta"],
+            p.get("harvest_duty", 0.0))) for p in probes])
+        # Error relative to the TOTAL access latency (wait + service):
+        # that is what the solver consumes, and it keeps low-rho cells'
+        # few-ns waits from turning DES noise into huge relative errors.
+        err = (np.abs(lut_wait - des_wait)
+               / (des_wait + hw.DRAM_SERVICE_NS))
+        row["worst_err"] = float(err.max()) if len(err) else 0.0
+        history.append(row)
+
+        # Bisect each axis's worst interval (if it clears the floor).
+        grew = False
+        for axis in names:
+            cand = [(err[i], owners[i][1]) for i in range(len(owners))
+                    if owners[i][0] == axis]
+            if not cand:
+                continue
+            worst, j = max(cand)
+            if worst <= REFINE_ERR_FLOOR:
+                continue
+            g = list(grids[axis])
+            g.insert(j + 1, _midpoint(axis, g[j], g[j + 1]))
+            grids[axis] = tuple(g)
+            grew = True
+        if not grew:
+            # Nothing left to bisect: the next round's metrics cannot
+            # move, so record the (exactly zero) deltas and stop.
+            m2 = metrics(lut)
+            history.append(dict(
+                round=rnd + 1, shape=row["shape"], cells=row["cells"],
+                converged=True, worst_err=row["worst_err"], seconds=0.0,
+                d_geomean=0.0, d_token_p99=0.0, **m2))
+            break
+    return lut, history

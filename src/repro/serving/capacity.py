@@ -286,7 +286,10 @@ def plan_capacity(archs, trace: Trace, *, slo_p99_ms: float,
     judge candidates by one law.  LUT mode approximates each lane by
     the LUT's build-base transfer/service constants (the per-lane
     ``t_xfer_ns`` is folded into ``rho`` already), trading per-cell DES
-    fidelity for a zero-simulation sweep.
+    fidelity for a zero-simulation sweep -- with a warm
+    ``$REPRO_LUT_CACHE`` (the persistent LUT store,
+    :mod:`repro.core.lutstore`) the whole plan then runs without a
+    single DES trace.
 
     ``harvest_bw_gbps > 0`` enables idle-I/O harvesting (arXiv
     2511.12349): each epoch lends that much idle I/O bandwidth per

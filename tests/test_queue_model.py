@@ -161,13 +161,15 @@ class TestQueueLUT:
         open_ = float(sw.cell(rho=0.8, outstanding=1e9).mean_ns)
         assert tight < open_
 
-    def test_engines_build_agreeing_tables(self, lut):
+    def test_engines_build_agreeing_tables(self):
         # The same default grid built by the timestep reference engine:
         # the two surfaces must agree where queueing is meaningful (the
-        # residual is DES sampling noise, not a law mismatch).
-        ts = build_queue_lut(steps=LUT_STEPS, reps=2, engine="timestep")
+        # residual is DES sampling noise, not a law mismatch -- reps=4
+        # keeps the median comfortably inside the gate, ~0.18 measured).
+        ts = build_queue_lut(steps=LUT_STEPS, reps=4, engine="timestep")
+        ev = build_queue_lut(steps=LUT_STEPS, reps=4, engine="event")
         tw = np.asarray(ts.wait_ns)
-        ew = np.asarray(lut.wait_ns)
+        ew = np.asarray(ev.wait_ns)
         mask = tw > 15.0
         assert mask.sum() > 30           # the grid has real queueing cells
         rel = np.abs(ew - tw)[mask] / tw[mask]
